@@ -1,0 +1,28 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (see paper_figures for the figure
+catalogue; roofline.py emits the dry-run-derived §Roofline table).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import paper_figures as PF
+    print("name,us_per_call,derived", flush=True)
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for fn in PF.ALL:
+        if only and only not in fn.__name__:
+            continue
+        rows = []
+        try:
+            fn(rows)
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            rows.append(f"{fn.__name__},0,ERROR={type(e).__name__}:{e}")
+        for r in rows:
+            print(r, flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,5 @@
+"""Architecture configs (one module per assigned architecture).
+
+Each module exposes ``config()`` (the exact published configuration) and
+``smoke_config()`` (a reduced same-family configuration for CPU tests).
+"""

@@ -1,0 +1,52 @@
+"""The SimulationEngine protocol — RepEx's engine-agnosticism boundary.
+
+This interface is the paper's central design move: the RE algorithm
+(exchange math, ladder bookkeeping, scheduling, fault handling) never sees
+inside the engine; engines never see the exchange logic.  The paper's
+engines were Amber and NAMD; ours are a JAX MD engine (`repro.md.MDEngine`),
+a Lennard-Jones fluid engine (`repro.md.LJEngine`, Pallas force kernel) and
+an LM parallel-tempering engine (`repro.models.LMEngine`).
+
+All methods are *stacked over replicas* (leading axis R) and jit-able; the
+Execution-Mode layer decides how the replica axis maps to hardware.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Protocol, runtime_checkable
+
+import jax
+
+Ctrl = Dict[str, jax.Array]      # control parameters, each (R, ...)
+StateStack = Any                 # pytree with leading replica axis
+
+
+@runtime_checkable
+class SimulationEngine(Protocol):
+    """Contract every pluggable simulation engine implements."""
+
+    def init_state(self, rng: jax.Array, n_replicas: int) -> StateStack:
+        """Stacked initial states for R replicas."""
+        ...
+
+    def propagate(self, state: StateStack, ctrl: Ctrl, n_steps: jax.Array,
+                  rng: jax.Array, max_steps: int = 0) -> StateStack:
+        """The 'MD phase': advance each replica n_steps[i] steps under its
+        control parameters.  n_steps is per-replica and traced (asynchronous
+        pattern propagates replicas by different amounts); ``max_steps`` is
+        the static compiled bound — replicas with n_i < max_steps mask their
+        trailing updates (idle lanes, exactly like a straggler's slot)."""
+        ...
+
+    def energy(self, state: StateStack, ctrl: Ctrl) -> jax.Array:
+        """Reduced (dimensionless) energy u_i(x_i) per replica: (R,)."""
+        ...
+
+    def cross_energy(self, state: StateStack, ctrl: Ctrl) -> jax.Array:
+        """Full matrix u_j(x_i): row i = state of replica i, col j = ctrl j.
+        Needed by U/S-type exchanges and the Gibbs (matrix) scheme — the
+        paper's 'single-point energy calculation'."""
+        ...
+
+    def is_failed(self, state: StateStack) -> jax.Array:
+        """(R,) bool — replica-level failure detection (NaN/divergence)."""
+        ...

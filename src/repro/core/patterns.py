@@ -1,0 +1,104 @@
+"""Replica-Exchange Patterns: synchronous vs asynchronous cycles.
+
+Synchronous (paper Fig 1a): every replica propagates exactly
+``md_steps`` and then a global exchange runs — the collective IS the
+barrier.
+
+Asynchronous (paper Fig 1b), TPU-adapted: SPMD has no OS-level asynchrony,
+so heterogeneous progress is modelled explicitly.  Replica i advances
+``round(window * speed_i)`` steps per real-time window (speed varies across
+replicas — the paper's heterogeneous-engines / straggler scenario), banks
+progress in ``debt``, and only replicas whose debt crosses ``md_steps`` are
+*ready* to exchange; pairs with an un-ready member are auto-rejected and the
+un-ready replica keeps simulating.  A straggler therefore delays only its
+ladder neighbours, never the ensemble — the paper's async claim, preserved
+under SPMD.
+
+``dim_index`` / ``parity`` are HOST-static per cycle (the driver schedules
+dimensions round-robin, exactly like the paper's M-REMD: "simulations are
+performed only in one dimension at any given instant of time").  Each
+(dim, parity) pair is its own compiled cycle — 2 x n_dims small variants.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import modes as M
+from repro.core.controls import ControlGrid, ctrl_for_assignment
+from repro.core.ensemble import Ensemble
+from repro.core.exchange import matrix_exchange, neighbor_exchange
+
+
+def _propagate(engine, ens: Ensemble, grid: ControlGrid, n_steps, rng,
+               execution: Dict[str, Any], max_steps: int, mesh=None):
+    ctrl = ctrl_for_assignment(grid, ens.assignment)
+    if execution["mode"] == "mode2":
+        return M.propagate_mode2(engine, ens.state, ctrl, n_steps, rng,
+                                 execution["n_waves"], mesh,
+                                 max_steps=max_steps)
+    return M.propagate_mode1(engine, ens.state, ctrl, n_steps, rng, mesh,
+                             max_steps=max_steps)
+
+
+def _exchange(engine, state, grid, assignment, dim_index: int, parity: int,
+              rng, scheme: str, ready=None):
+    if scheme == "matrix":
+        return matrix_exchange(engine, state, grid, assignment, rng)
+    return neighbor_exchange(engine, state, grid, assignment, dim_index,
+                             parity, rng, ready=ready)
+
+
+def sync_cycle(engine, grid: ControlGrid, ens: Ensemble, md_steps: int,
+               dim_index: int, parity: int, scheme: str = "neighbor",
+               execution=None, mesh=None
+               ) -> Tuple[Ensemble, Dict[str, Any]]:
+    """One synchronous cycle: propagate-all barrier, then one exchange sweep
+    along the scheduled dimension (DEO parity)."""
+    execution = execution or {"mode": "mode1", "n_waves": 1}
+    k_md, k_ex, k_next = jax.random.split(ens.rng, 3)
+
+    n_steps = jnp.full(ens.assignment.shape, md_steps, jnp.int32)
+    state = _propagate(engine, ens, grid, n_steps, k_md, execution,
+                       md_steps, mesh)
+
+    assignment, stats = _exchange(engine, state, grid, ens.assignment,
+                                  dim_index, parity, k_ex, scheme,
+                                  ready=ens.alive)
+    new_ens = ens._replace(state=state, assignment=assignment, rng=k_next,
+                           cycle=ens.cycle + 1)
+    return new_ens, {f"dim{dim_index}": stats}
+
+
+def async_cycle(engine, grid: ControlGrid, ens: Ensemble, md_steps: int,
+                window_steps: int, dim_index: int, parity: int,
+                scheme: str = "neighbor", execution=None, mesh=None
+                ) -> Tuple[Ensemble, Dict[str, Any]]:
+    """One asynchronous real-time window.
+
+    Each replica advances by its own speed; replicas whose banked progress
+    reaches ``md_steps`` become ready, exchange, and bank the remainder.
+    """
+    execution = execution or {"mode": "mode1", "n_waves": 1}
+    k_md, k_ex, k_next = jax.random.split(ens.rng, 3)
+
+    max_steps = 2 * window_steps
+    n_steps = jnp.clip(
+        jnp.round(window_steps * ens.speed).astype(jnp.int32), 1, max_steps)
+    state = _propagate(engine, ens, grid, n_steps, k_md, execution,
+                       max_steps, mesh)
+    debt = ens.debt + n_steps.astype(jnp.float32)
+    ready = (debt >= md_steps) & ens.alive
+
+    assignment, stats = _exchange(engine, state, grid, ens.assignment,
+                                  dim_index, parity, k_ex, scheme,
+                                  ready=ready)
+    debt = jnp.where(ready, debt - md_steps, debt)
+    out_stats: Dict[str, Any] = {f"dim{dim_index}": stats,
+                                 "ready_frac": jnp.mean(
+                                     ready.astype(jnp.float32))}
+    new_ens = ens._replace(state=state, assignment=assignment, rng=k_next,
+                           cycle=ens.cycle + 1, debt=debt)
+    return new_ens, out_stats

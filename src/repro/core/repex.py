@@ -1,0 +1,177 @@
+"""REMDDriver — the top-level RepEx runtime.
+
+Host-side orchestration (the paper's EMM/AMM roles), device-side compiled
+cycles.  Per-cycle wall time is decomposed exactly as the paper's Eq. (1):
+
+    T_c = T_MD + T_EX + T_data + T_RepEx_over + T_runtime_over
+
+  T_MD           — compiled propagate phase
+  T_EX           — compiled exchange phase
+  T_data         — host<->device movement of assignments/energies
+  T_RepEx_over   — host-side task preparation (scheduling, ladder bookkeeping)
+  T_runtime_over — dispatch/launch overhead of the compiled step (the
+                   RADICAL-Pilot analogue in our stack is the XLA dispatch)
+
+The driver supports both patterns, both execution modes, failure
+injection/recovery, and periodic ensemble checkpointing (restart-able,
+mesh-independent).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import RepExConfig
+from repro.core import failures as F
+from repro.core import patterns
+from repro.core.controls import ControlGrid, build_grid
+from repro.core.ensemble import Ensemble, make_ensemble
+from repro.core.exchange import (matrix_exchange, neighbor_exchange)
+from repro.core.modes import auto_mode
+from repro.ckpt import CheckpointManager
+
+
+class REMDDriver:
+    def __init__(self, engine, cfg: RepExConfig, mesh=None,
+                 slots: Optional[int] = None, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 0, failure_rate: float = 0.0):
+        self.engine = engine
+        self.cfg = cfg
+        self.mesh = mesh
+        self.grid: ControlGrid = build_grid(cfg)
+        n = self.grid.n_ctrl
+        if slots is None:
+            slots = n * cfg.cores_per_replica
+        eff_slots = max(slots // max(cfg.cores_per_replica, 1), 1)
+        if cfg.execution_mode == "mode1":
+            self.execution = {"mode": "mode1", "n_waves": 1}
+        elif cfg.execution_mode == "mode2":
+            self.execution = auto_mode(n, eff_slots)
+            if self.execution["mode"] != "mode2":      # force at least 2 waves
+                self.execution = {"mode": "mode2",
+                                  "n_waves": 2 if n % 2 == 0 else 1}
+        else:
+            self.execution = auto_mode(n, eff_slots)
+        self.failure_rate = failure_rate
+        self.ckpt = (CheckpointManager(ckpt_dir, every=ckpt_every)
+                     if ckpt_dir else None)
+        self._compiled: Dict[Any, Any] = {}
+        self.history: List[Dict[str, float]] = []
+        self.acceptance = {f"dim{d.index}": [0.0, 0.0]
+                           for d in self.grid.dims}
+
+    # -- compiled cycle factory (one per dim x parity x pattern) ----------
+
+    def _cycle_fn(self, dim_index: int, parity: int):
+        key = (dim_index, parity, self.cfg.pattern)
+        if key in self._compiled:
+            return self._compiled[key]
+        cfg = self.cfg
+        if cfg.pattern == "asynchronous":
+            fn = functools.partial(
+                patterns.async_cycle, self.engine, self.grid,
+                md_steps=cfg.md_steps_per_cycle,
+                window_steps=max(int(cfg.md_steps_per_cycle
+                                     * cfg.async_window), 1),
+                dim_index=dim_index, parity=parity,
+                scheme=cfg.exchange_scheme, execution=self.execution,
+                mesh=self.mesh)
+        else:
+            fn = functools.partial(
+                patterns.sync_cycle, self.engine, self.grid,
+                md_steps=cfg.md_steps_per_cycle,
+                dim_index=dim_index, parity=parity,
+                scheme=cfg.exchange_scheme, execution=self.execution,
+                mesh=self.mesh)
+        jitted = jax.jit(lambda ens: fn(ens))
+        self._compiled[key] = jitted
+        return jitted
+
+    # -- public API --------------------------------------------------------
+
+    def init(self, seed: Optional[int] = None) -> Ensemble:
+        rng = jax.random.key(self.cfg.seed if seed is None else seed)
+        hetero = self.cfg.pattern == "asynchronous"
+        return make_ensemble(self.engine, rng, self.grid.n_ctrl,
+                             hetero_speed=hetero)
+
+    def run(self, ens: Ensemble, n_cycles: Optional[int] = None,
+            verbose: bool = False) -> Ensemble:
+        n_cycles = n_cycles or self.cfg.n_cycles
+        n_dims = len(self.grid.dims)
+        backup = jax.tree.map(jnp.copy, ens.state)
+        fail_key = jax.random.key(self.cfg.seed + 999)
+
+        for c in range(n_cycles):
+            t0 = time.perf_counter()
+            cyc = int(jax.device_get(ens.cycle))
+            dim_index = cyc % n_dims
+            parity = (cyc // n_dims) % 2
+            step = self._cycle_fn(dim_index, parity)
+            t_prep = time.perf_counter() - t0        # T_RepEx_over
+
+            # (optional) failure injection between cycles
+            if self.failure_rate > 0:
+                fail_key, k = jax.random.split(fail_key)
+                ens = F.inject_failures(ens, k, self.failure_rate)
+
+            t1 = time.perf_counter()
+            new_ens, stats = step(ens)
+            jax.block_until_ready(new_ens.assignment)
+            t_step = time.perf_counter() - t1        # T_MD + T_EX fused
+
+            # failure detection + recovery
+            t2 = time.perf_counter()
+            failed = jax.device_get(F.detect(self.engine, new_ens))
+            if failed.any():
+                policy = ("relaunch" if self.cfg.relaunch_failed
+                          else "continue")
+                new_ens, _ = F.recover(self.engine, new_ens,
+                                       jnp.asarray(failed), policy, backup)
+            else:
+                backup = new_ens.state
+            t_recover = time.perf_counter() - t2
+
+            # bookkeeping (T_data: pull scalars to host)
+            t3 = time.perf_counter()
+            dkey = f"dim{dim_index}"
+            s = jax.device_get(stats[dkey])
+            self.acceptance[dkey][0] += float(s["accepted"])
+            self.acceptance[dkey][1] += float(s["attempted"])
+            t_data = time.perf_counter() - t3
+
+            self.history.append({
+                "cycle": cyc, "dim": dim_index,
+                "t_step": t_step, "t_prep": t_prep,
+                "t_recover": t_recover, "t_data": t_data,
+                "accept": float(s["accepted"]),
+                "attempt": float(s["attempted"]),
+                "failed": int(failed.sum()),
+            })
+            ens = new_ens
+
+            if self.ckpt is not None:
+                self.ckpt.maybe_save(cyc, ens._asdict())
+            if verbose:
+                acc = (s["accepted"] / max(s["attempted"], 1)) * 100
+                print(f"cycle {cyc:4d} dim {dim_index} "
+                      f"acc {acc:5.1f}%  t {t_step*1e3:7.1f} ms")
+        return ens
+
+    def acceptance_ratios(self) -> Dict[str, float]:
+        return {k: (a / max(n, 1.0))
+                for k, (a, n) in self.acceptance.items()}
+
+    def restore(self, ens_like: Ensemble) -> Optional[Ensemble]:
+        """Restart from the latest ensemble checkpoint (node-failure path)."""
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return None
+        from repro.ckpt import load_checkpoint
+        tree, step, _ = load_checkpoint(self.ckpt.directory,
+                                        ens_like._asdict())
+        return Ensemble(**tree)

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  flash_attention — blockwise-causal online-softmax attention (train/prefill
+                    hot spot of the LM engine).
+  lj_forces       — all-pairs Lennard-Jones energy/forces (the MD phase hot
+                    spot; the paper's simulation phase).
+  exchange_matrix — all-pairs replica x ctrl reduced-energy matrix (the
+                    paper's S-REMD 'single point energy' exchange hot spot).
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd wrapper; interpret=True on CPU), ref.py (pure-jnp oracle).
+"""
+
+
+def default_interpret() -> bool:
+    import jax
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,1 @@
+from repro.kernels.exchange_matrix.ops import exchange_matrix

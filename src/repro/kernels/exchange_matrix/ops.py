@@ -1,0 +1,56 @@
+"""jit'd wrapper: pack feature/ctrl dicts, pad to tiles, dispatch.
+
+``exchange_matrix(features, ctrl, use_kernel=...)`` defaults to the Pallas
+kernel in interpret mode off-TPU only when asked; the jnp oracle is the
+default on CPU (interpret mode is a correctness harness, not a fast path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.exchange_matrix import kernel as K
+from repro.kernels.exchange_matrix import ref
+
+
+def _pack(features: Dict, ctrl: Dict, block_r: int, block_c: int):
+    r = features["u_base"].shape[0]
+    c = ctrl["beta"].shape[0]
+    rp = ((r + block_r - 1) // block_r) * block_r
+    cp = ((c + block_c - 1) // block_c) * block_c
+    f = jnp.zeros((8, rp), jnp.float32)
+    f = f.at[0, :r].set(features["u_base"])
+    f = f.at[1, :r].set(features["u_elec"])
+    f = f.at[2, :r].set(jnp.rad2deg(features["phi"]))
+    f = f.at[3, :r].set(jnp.rad2deg(features["psi"]))
+    f = f.at[4, :r].set(1.0)
+    g = jnp.zeros((8, cp), jnp.float32)
+    g = g.at[0, :c].set(ctrl["beta"])
+    if "salt" in ctrl:
+        g = g.at[1, :c].set(ctrl["salt"])
+    center = ctrl.get("umbrella_center")
+    kk = ctrl.get("umbrella_k")
+    if center is not None:
+        n_u = center.shape[1]
+        g = g.at[2, :c].set(center[:, 0])
+        g = g.at[4, :c].set(kk[:, 0])
+        if n_u > 1:
+            g = g.at[3, :c].set(center[:, 1])
+            g = g.at[5, :c].set(kk[:, 1])
+    return f, g, r, c
+
+
+def exchange_matrix(features: Dict, ctrl: Dict, use_kernel: bool = False,
+                    block_r: int = 128, block_c: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    if not use_kernel:
+        return ref.exchange_matrix(features, ctrl)
+    interp = default_interpret() if interpret is None else interpret
+    f, g, r, c = _pack(features, ctrl, block_r, block_c)
+    out = K.exchange_matrix_kernel(f, g, block_r=block_r, block_c=block_c,
+                                   interpret=interp)
+    return out[:r, :c]

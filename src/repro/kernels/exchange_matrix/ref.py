@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the (R x C) cross-energy matrix.
+
+u[i, c] = beta_c * ( u_base_i
+                   + (1 - 0.5 salt_c) * u_elec_i
+                   + sum_a k_c[a] * wrap(angle_i[a] - center_c[a])^2 )
+
+angles in degrees, wrap to (-180, 180].
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _wrap(d):
+    return jnp.mod(d + 180.0, 360.0) - 180.0
+
+
+def exchange_matrix(features, ctrl):
+    phi = jnp.rad2deg(features["phi"])[:, None]     # (R, 1)
+    psi = jnp.rad2deg(features["psi"])[:, None]
+    beta = ctrl["beta"][None, :]                    # (1, C)
+    salt = ctrl.get("salt")
+    center = ctrl["umbrella_center"]                # (C, U)
+    k = ctrl["umbrella_k"]
+    u = features["u_base"][:, None] + (
+        (1.0 - 0.5 * (salt[None, :] if salt is not None else 0.0))
+        * features["u_elec"][:, None])
+    n_u = center.shape[1]
+    angles = [phi, psi][:n_u]
+    for a in range(n_u):
+        d = _wrap(angles[a] - center[None, :, a])
+        u = u + k[None, :, a] * d * d
+    return beta * u

@@ -1,0 +1,56 @@
+"""jit'd wrapper around the flash attention Pallas kernel.
+
+Handles GQA head expansion, head-dim padding to the 128-lane boundary and
+backend dispatch (interpret=True off-TPU so the kernel body is validated on
+CPU).  Layout in: (B, S, H, D) like the model code; out the same.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _pad_lanes(x, d_target):
+    d = x.shape[-1]
+    if d == d_target:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, d_target - d)]
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B, S, H, D); k, v: (B, T, KVH, D) with KVH | H. Returns (B,S,H,D).
+
+    Scaling uses the TRUE head dim (pre-padding), matching the oracle.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b, s, h, d = q.shape
+    t, g = k.shape[1], k.shape[2]
+    assert h % g == 0
+    rep = h // g
+    # expand kv heads for grouped queries
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    d_pad = max(128, ((d + 127) // 128) * 128)
+    scale_fix = (d_pad / d) ** 0.5   # kernel scales by 1/sqrt(d_pad)
+    qt = _pad_lanes(jnp.moveaxis(q, 2, 1), d_pad).reshape(b * h, s, d_pad)
+    qt = qt * scale_fix
+    kt = _pad_lanes(jnp.moveaxis(k, 2, 1), d_pad).reshape(b * h, t, d_pad)
+    vt = _pad_lanes(jnp.moveaxis(v, 2, 1), d_pad).reshape(b * h, t, d_pad)
+    out = flash_attention_kernel(qt, kt, vt, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=interpret)
+    out = out.reshape(b, h, s, d_pad)[..., :d]
+    return jnp.moveaxis(out, 1, 2)

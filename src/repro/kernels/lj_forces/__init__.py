@@ -1,0 +1,1 @@
+from repro.kernels.lj_forces.ops import lj_energy, lj_forces

@@ -1,0 +1,56 @@
+"""jit'd wrappers: pack (N,3) positions into the (8, N') kernel layout,
+pad to lane multiples, dispatch to the Pallas kernels (interpret on CPU),
+and expose energy with an analytic custom_vjp whose backward IS the forces
+kernel — the gradient of the MD hot loop never falls back to autodiff
+through the kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.lj_forces import kernel as K
+from repro.kernels.lj_forces import ref
+
+
+def _pack(pos, block: int):
+    n = pos.shape[0]
+    n_pad = max(block, ((n + block - 1) // block) * block)
+    c = jnp.zeros((8, n_pad), jnp.float32)
+    c = c.at[0:3, :n].set(pos.T.astype(jnp.float32))
+    c = c.at[3, :n].set(1.0)      # validity row
+    return c, n
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def lj_energy(pos, sigma: float, eps: float, box: float, block: int = 128,
+              interpret: Optional[bool] = None):
+    interp = default_interpret() if interpret is None else interpret
+    c, n = _pack(pos, block)
+    return K.lj_energy_kernel(c, sigma=sigma, eps=eps, box=box, block=block,
+                              interpret=interp)
+
+
+def _fwd(pos, sigma, eps, box, block, interpret):
+    return lj_energy(pos, sigma, eps, box, block, interpret), pos
+
+
+def _bwd(sigma, eps, box, block, interpret, pos, g):
+    f = lj_forces(pos, sigma, eps, box, block, interpret)
+    return (-g * f,)    # dU/dx = -F
+
+
+lj_energy.defvjp(_fwd, _bwd)
+
+
+def lj_forces(pos, sigma: float, eps: float, box: float, block: int = 128,
+              interpret: Optional[bool] = None):
+    interp = default_interpret() if interpret is None else interpret
+    c, n = _pack(pos, block)
+    out = K.lj_forces_kernel(c, sigma=sigma, eps=eps, box=box, block=block,
+                             interpret=interp)
+    return out[0:3, :n].T

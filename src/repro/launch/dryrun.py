@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each cell
+the full step (train fwd+bwd+AdamW / prefill / decode) is lowered onto the
+production mesh (16x16 single-pod, 2x16x16 multi-pod), compiled by the XLA
+SPMD partitioner, and its memory_analysis / cost_analysis / collective
+schedule is recorded for the roofline in EXPERIMENTS.md.
+
+The XLA_FLAGS line above MUST run before any other jax-touching import —
+jax locks the device count at first init.  This module is the ONLY place
+that flag is set; tests/benches see the real single device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo_1b --cell train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod-only]
+Results are cached as JSON under experiments/dryrun/.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.config import SHAPE_CELLS, ShapeCell, TrainConfig
+from repro.launch import steps as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.models.lm import LM
+
+OUT_DIR = "experiments/dryrun"
+
+# Per-arch training knobs for the big cells (microbatching keeps the
+# rematerialized activations inside v5e HBM).
+# NOTE: microbatching must keep (global_batch / microbatches) divisible by
+# the batch-sharding group (pure-DP archs use all 256/512 devices for batch,
+# so they must NOT microbatch below one row per device).
+TRAIN_OVERRIDES: Dict[str, Dict[str, Any]] = {
+    "mistral_large_123b": {"num_microbatches": 4},
+    "internvl2_26b": {"num_microbatches": 2},
+    "nemotron_4_15b": {"num_microbatches": 2},
+    "recurrentgemma_9b": {"num_microbatches": 2},
+    "deepseek_v2_lite_16b": {"num_microbatches": 2},
+    "deepseek_moe_16b": {"num_microbatches": 2},
+}
+
+DTYPE_BYTES = {"f8": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+               "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+               "s64": 8, "u64": 8, "pred": 1}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(\(?(?:\w+\[[^\]]*\][^)]*?)\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"\(")
+SHAPE_RE = re.compile(r"(f8|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64"
+                      r"|pred)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum output-operand bytes of every collective op (per-device view)."""
+    per_kind: Dict[str, int] = {}
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape_part, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_part)
+        per_kind[kind] = per_kind.get(kind, 0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+    return {"bytes_by_kind": per_kind, "counts": counts,
+            "total_bytes": sum(per_kind.values())}
+
+
+def _abstract_batch(cfg, cell: ShapeCell, mesh, multi_pod: bool,
+                    batch_axes=None):
+    specs = registry.input_specs(cfg, cell)
+    shardings = S.batch_shardings(specs, mesh, multi_pod,
+                                  batch_axes=batch_axes)
+    return jax.tree.map(
+        lambda sp, sh: jax.ShapeDtypeStruct(sp.shape, sp.dtype, sharding=sh),
+        specs, shardings)
+
+
+def lower_cell(arch: str, cell: ShapeCell, multi_pod: bool,
+               dump_hlo: Optional[str] = None) -> Dict[str, Any]:
+    import dataclasses
+    from repro.models import shardctx
+    cfg = registry.get_config(arch)
+    # serving: vLLM-style KV-head replication when the geometry allows
+    # (tp % G == 0 and H % tp == 0) — cache shards kv_heads->model and
+    # decode attention is fully local (no psum).  Exactness proven in
+    # tests/test_models.py::test_kv_replication_exact.
+    tp = 16
+    if (cell.kind in ("decode", "prefill")
+            and cfg.attention in ("gqa", "local")
+            and cfg.n_kv_heads % tp != 0 and tp % cfg.n_kv_heads == 0
+            and cfg.n_heads % tp == 0
+            and registry.param_count(cfg) < 50e9):
+        # 2x cache for zero decode psums — applied where the doubled
+        # cache still fits beside the weights (mistral-123B excluded;
+        # its numbers with replication are recorded in §Perf).
+        cfg = dataclasses.replace(cfg, kv_replicate_to=tp)
+    lm = LM(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+
+    if cell.kind == "train":
+        rules, batch_axes, model_axis = shd.pick_train_rules(
+            cfg.n_heads, multi_pod)
+        shardctx.set_activation_sharding(batch_axes, model_axis,
+                                         dict(mesh.shape))
+        tcfg = TrainConfig(**TRAIN_OVERRIDES.get(arch, {}))
+        step = S.make_train_step(lm, tcfg)
+        state_abs = S.abstract_train_state(lm, mesh, rules)
+        batch_abs = _abstract_batch(cfg, cell, mesh, multi_pod,
+                                    batch_axes=batch_axes)
+        state_shardings = jax.tree.map(lambda s: s.sharding, state_abs)
+        with mesh:
+            lowered = jax.jit(step,
+                              out_shardings=(state_shardings, None)
+                              ).lower(state_abs, batch_abs)
+    elif cell.kind == "prefill":
+        batch_axes = ("pod", "data") if multi_pod else ("data",)
+        shardctx.set_activation_sharding(batch_axes, "model",
+                                         dict(mesh.shape))
+        rules = shd.serve_rules_for(cfg, multi_pod, decode=False)
+        step = S.make_prefill_step(lm, cache_len=cell.seq_len)
+        params_abs = S.abstract_params_for_serve(lm, mesh, rules)
+        batch_abs = _abstract_batch(cfg, cell, mesh, multi_pod)
+        # pin the produced decode state to the layout decode consumes
+        dec_rules = shd.serve_rules_for(cfg, multi_pod, decode=True)
+        state_abs = S.abstract_decode_state(lm, cell.global_batch,
+                                            cell.seq_len, mesh, dec_rules)
+        state_shardings = jax.tree.map(
+            lambda s: getattr(s, "sharding", None), state_abs)
+        state_shardings["index"] = None
+        with mesh:
+            lowered = jax.jit(
+                step, out_shardings=(None, state_shardings)
+            ).lower(params_abs, batch_abs)
+    else:  # decode
+        batch_axes = ("pod", "data") if multi_pod else ("data",)
+        shardctx.set_activation_sharding(batch_axes, "model",
+                                         dict(mesh.shape))
+        rules = shd.serve_rules_for(cfg, multi_pod, decode=True)
+        if cell.global_batch == 1:
+            rules = dict(rules)
+            rules["batch"] = ((),)
+        step = S.make_decode_step(lm)
+        params_abs = S.abstract_params_for_serve(lm, mesh, rules)
+        state_abs = S.abstract_decode_state(lm, cell.global_batch,
+                                            cell.seq_len, mesh, rules)
+        state_abs["index"] = jax.ShapeDtypeStruct((), jnp.int32)
+        batch_abs = _abstract_batch(cfg, cell, mesh, multi_pod)
+        state_shardings = jax.tree.map(
+            lambda s: getattr(s, "sharding", None), state_abs)
+        with mesh:
+            # pin the cache round-trip sharding: in == out, so the DUS
+            # stays local and the partitioner cannot rematerialize the
+            # cache to satisfy a divergent output layout
+            lowered = jax.jit(
+                step, out_shardings=(None, state_shardings)
+            ).lower(params_abs, state_abs, batch_abs["tokens"])
+
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    shardctx.clear()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    if dump_hlo:
+        with open(dump_hlo, "w") as f:
+            f.write(hlo)
+
+    from repro.launch import hlo_analysis
+    weighted = hlo_analysis.analyze(hlo)
+
+    mem_out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_out[attr] = int(v)
+
+    flops_xla = float(cost.get("flops", -1)) if cost else -1.0
+
+    return {
+        "arch": arch, "cell": cell.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": 512 if multi_pod else 256,
+        "ok": True,
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "memory": mem_out,
+        # trip-count-weighted, per-device (see hlo_analysis.py)
+        "flops_per_device": weighted["flops"],
+        "write_bytes_per_device": weighted["write_bytes"],
+        "collectives": {
+            "bytes_by_kind": weighted["collective_bytes"],
+            "counts": weighted["collective_counts"],
+            "total_bytes": weighted["collective_total"],
+            "total_bytes_tpu": weighted["collective_total_tpu"],
+        },
+        "flops_xla_unweighted": flops_xla,
+        "hlo_lines": len(hlo.splitlines()),
+    }
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool,
+             force: bool = False) -> Dict[str, Any]:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    tag = f"{arch}__{cell_name}__{'mp' if multi_pod else 'sp'}"
+    path = os.path.join(OUT_DIR, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    cell = next(c for c in SHAPE_CELLS if c.name == cell_name)
+    cfg = registry.get_config(arch)
+    skip = registry.applicable(cfg, cell)
+    if skip:
+        result: Dict[str, Any] = {"arch": arch, "cell": cell_name,
+                                  "mesh": "2x16x16" if multi_pod else "16x16",
+                                  "ok": None, "skipped": skip}
+    else:
+        try:
+            result = lower_cell(arch, cell, multi_pod)
+        except Exception as e:  # noqa: BLE001 — record the failure
+            result = {"arch": arch, "cell": cell_name,
+                      "mesh": "2x16x16" if multi_pod else "16x16",
+                      "ok": False, "error": f"{type(e).__name__}: {e}",
+                      "traceback": traceback.format_exc()[-4000:]}
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        jobs = [(a, c.name, mp)
+                for a in registry.ARCH_IDS
+                for c in SHAPE_CELLS
+                for mp in (False, True)]
+    else:
+        assert args.arch and args.cell
+        jobs = [(args.arch, args.cell, args.multipod)]
+
+    n_ok = n_skip = n_fail = 0
+    for arch, cell, mp in jobs:
+        r = run_cell(arch, cell, mp, force=args.force)
+        jax.clear_caches()
+        status = ("SKIP" if r.get("skipped")
+                  else "OK" if r.get("ok") else "FAIL")
+        n_ok += status == "OK"
+        n_skip += status == "SKIP"
+        n_fail += status == "FAIL"
+        extra = ""
+        if status == "OK":
+            gb = r["memory"].get("temp_size_in_bytes", 0) / 2**30
+            extra = (f"compile {r['t_compile_s']:7.1f}s  temp {gb:6.2f} GiB  "
+                     f"coll {r['collectives']['total_bytes']/2**20:8.1f} MiB")
+        elif status == "FAIL":
+            extra = r["error"][:120]
+        print(f"[{status:4s}] {arch:24s} {cell:12s} "
+              f"{'2x16x16' if mp else '16x16':8s} {extra}", flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

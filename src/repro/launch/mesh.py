@@ -1,0 +1,25 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state.  The single-pod mesh is
+16x16 = 256 chips (one TPU v5e pod in this project's hardware model); the
+multi-pod mesh adds a leading "pod" axis: 2 x 16 x 16 = 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh():
+    """1-device mesh with production axis names, for CPU tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

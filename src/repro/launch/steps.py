@@ -1,0 +1,157 @@
+"""jit-able train / prefill / decode steps with sharding annotations.
+
+``make_train_step`` builds the full fwd+bwd+AdamW step with optional
+gradient-accumulation microbatching and scan-over-layers remat; the
+returned (step_fn, state_shardings, batch_shardings) triple is what both
+the real trainer and the multi-pod dry-run consume.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as shd
+from repro.config import ModelConfig, TrainConfig
+from repro.models.lm import LM
+from repro.models import params as PRM
+from repro.optim import adamw_init, adamw_update, sgld_noise
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def make_train_state_defs(lm: LM):
+    pdefs = lm.param_defs()
+    return {
+        "params": pdefs,
+        "mu": pdefs,      # AdamW moments shard exactly like params (ZeRO-1)
+        "nu": pdefs,
+        "step": PRM.ParamDef((), (), "zeros", dtype=jnp.int32),
+    }
+
+
+def init_train_state(rng, lm: LM):
+    pdefs = lm.param_defs()
+    params = PRM.init_params(rng, pdefs)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"params": params, "mu": zeros,
+            "nu": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_shardings(lm: LM, mesh, rules):
+    defs = make_train_state_defs(lm)
+    return jax.tree.map(
+        lambda d: shd.sharding_for(mesh, rules, d.axes, d.shape),
+        defs, is_leaf=PRM.is_def)
+
+
+def abstract_train_state(lm: LM, mesh, rules):
+    defs = make_train_state_defs(lm)
+
+    def mk(d: PRM.ParamDef):
+        s = shd.sharding_for(mesh, rules, d.axes, d.shape)
+        dt = jnp.float32 if d.dtype == jnp.float32 else d.dtype
+        return jax.ShapeDtypeStruct(d.shape, dt, sharding=s)
+    return jax.tree.map(mk, defs, is_leaf=PRM.is_def)
+
+
+def batch_shardings(batch_specs, mesh, multi_pod: bool, batch_axes=None):
+    axes = batch_axes or (("pod", "data") if multi_pod else ("data",))
+    group = tuple(a for a in axes if a in mesh.shape)
+
+    def mk(spec):
+        size = 1
+        for a in group:
+            size *= mesh.shape[a]
+        if spec.shape and spec.shape[0] % size == 0:
+            return NamedSharding(mesh, P(group))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(mk, batch_specs)
+
+
+def make_train_step(lm: LM, tcfg: TrainConfig):
+    """Returns step(state, batch, rng) -> (state, metrics)."""
+    remat = tcfg.remat_policy != "none"
+    M = tcfg.num_microbatches
+
+    def loss_fn(params, batch):
+        return lm.loss(params, batch, remat=remat)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(state, batch):
+        params = state["params"]
+        if M <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape((M, x.shape[0] // M) + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbatch):
+                (l, mets), g = grad_fn(params, mbatch)
+                carry = jax.tree.map(lambda a, b: a + b, carry, g)
+                return carry, (l, mets)
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            gsum, (losses, metss) = lax.scan(acc_body, zero, mb)
+            grads = jax.tree.map(lambda g: g / M, gsum)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metss)
+
+        from repro.optim.adamw import AdamWState
+        opt = AdamWState(state["step"], state["mu"], state["nu"])
+        new_params, new_opt, opt_metrics = adamw_update(tcfg, params, grads,
+                                                        opt)
+        new_state = {"params": new_params, "mu": new_opt.mu,
+                     "nu": new_opt.nu, "step": new_opt.step}
+        metrics = {**metrics, **opt_metrics}
+        return new_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Serve (prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def abstract_params_for_serve(lm: LM, mesh, rules, dtype=jnp.bfloat16):
+    """Serving params: bf16 weights, serve-rule shardings, no allocation."""
+    defs = lm.param_defs()
+
+    def mk(d: PRM.ParamDef):
+        s = shd.sharding_for(mesh, rules, d.axes, d.shape)
+        dt = dtype if jnp.issubdtype(d.dtype, jnp.floating) else d.dtype
+        return jax.ShapeDtypeStruct(d.shape, dt, sharding=s)
+    return jax.tree.map(mk, defs, is_leaf=PRM.is_def)
+
+
+def make_prefill_step(lm: LM, cache_len: Optional[int] = None):
+    def step(params, batch):
+        return lm.prefill(params, batch, cache_len=cache_len)
+    return step
+
+
+def make_decode_step(lm: LM):
+    def step(params, state, tokens):
+        return lm.decode_step(params, state, tokens)
+    return step
+
+
+def abstract_decode_state(lm: LM, batch: int, cache_len: int, mesh, rules):
+    defs = lm.decode_state_defs(batch, cache_len)
+
+    def mk(d: PRM.ParamDef):
+        s = shd.sharding_for(mesh, rules, d.axes, d.shape)
+        return jax.ShapeDtypeStruct(d.shape, d.dtype, sharding=s)
+    return jax.tree.map(mk, defs, is_leaf=PRM.is_def)

@@ -1,0 +1,2 @@
+from repro.md.system import MolecularSystem, chain_molecule
+from repro.md.engine import LJEngine, MDEngine

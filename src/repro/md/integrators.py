@@ -1,0 +1,42 @@
+"""BAOAB Langevin integrator (Leimkuhler-Matthews) in AKMA-ish units.
+
+positions Angstrom, velocities Angstrom/ps, masses amu, energies kcal/mol.
+acceleration = F / m * AKMA  (AKMA = 418.4 converts kcal/mol/A/amu to A/ps^2).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+AKMA = 418.4
+KB = 0.0019872041  # kcal/mol/K
+
+
+def maxwell_boltzmann(rng, masses, temperature, shape3):
+    sigma = jnp.sqrt(AKMA * KB * temperature / masses)[..., None]
+    return sigma * jax.random.normal(rng, shape3)
+
+
+def baoab_step(pos, vel, rng, force_fn: Callable, masses, temperature,
+               dt: float = 5e-4, gamma: float = 5.0):
+    """One BAOAB step at a (traced) per-replica temperature."""
+    m = masses[..., None]
+    f = force_fn(pos)
+    vel = vel + 0.5 * dt * AKMA * f / m                      # B
+    pos = pos + 0.5 * dt * vel                               # A
+    c1 = jnp.exp(-gamma * dt)
+    sigma = jnp.sqrt(AKMA * KB * temperature / masses)[..., None]
+    noise = jax.random.normal(rng, pos.shape)
+    vel = c1 * vel + jnp.sqrt(1 - c1 * c1) * sigma * noise   # O
+    pos = pos + 0.5 * dt * vel                               # A
+    f = force_fn(pos)
+    vel = vel + 0.5 * dt * AKMA * f / m                      # B
+    return pos, vel
+
+
+def kinetic_temperature(vel, masses):
+    ke = 0.5 * jnp.sum(masses[..., None] * vel * vel, axis=(-2, -1)) / AKMA
+    dof = 3 * masses.shape[-1]
+    return 2.0 * ke / (dof * KB)

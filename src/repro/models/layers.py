@@ -1,0 +1,292 @@
+"""Core neural layers: norms, RoPE, attention (GQA/local/chunked), MLPs.
+
+Pure-functional; params are dicts of arrays produced from ParamDef trees.
+The chunked attention path is the XLA-level "flash" algorithm (online softmax
+over query blocks) and doubles as the numerical oracle for the Pallas kernel
+in ``repro.kernels.flash_attention``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models.params import ParamDef, dense
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_defs(cfg: ModelConfig, name: str = "norm") -> Params:
+    if cfg.norm == "nonparametric_ln":      # OLMo: no learnable affine
+        return {}
+    return {name: ParamDef((cfg.d_model,), ("embed",), "ones")}
+
+
+def apply_norm(p: Params, cfg: ModelConfig, x: jax.Array,
+               name: str = "norm") -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = x32 * lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + 1e-6)
+        y = y * p[name].astype(jnp.float32)
+    elif cfg.norm == "layernorm":
+        mu = jnp.mean(x32, -1, keepdims=True)
+        var = jnp.var(x32, -1, keepdims=True)
+        y = (x32 - mu) * lax.rsqrt(var + 1e-5) * p[name].astype(jnp.float32)
+    elif cfg.norm == "nonparametric_ln":
+        mu = jnp.mean(x32, -1, keepdims=True)
+        var = jnp.var(x32, -1, keepdims=True)
+        y = (x32 - mu) * lax.rsqrt(var + 1e-5)
+    else:
+        raise ValueError(cfg.norm)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (GPT-NeoX half-rotation)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if x.ndim - angles.ndim == 2:                     # head axis present
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+
+def _grouped(q: jax.Array, kv_heads: int) -> jax.Array:
+    """(B,S,H,D) -> (B,S,G,Hg,D) with G = kv_heads."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, kv_heads, h // kv_heads, d)
+
+
+def full_attention(q, k, v, *, causal: bool, window: int = 0,
+                   q_offset: jax.Array | int = 0,
+                   kv_len: Optional[jax.Array] = None,
+                   softcap: float = 0.0) -> jax.Array:
+    """Plain O(S^2) attention. q:(B,S,H,D) k,v:(B,T,KVH,D) -> (B,S,H,D)."""
+    from repro.models import shardctx
+    b, s, h, d = q.shape
+    t, g = k.shape[1], k.shape[2]
+    if s > 1:
+        # context-parallel fallback for head counts that don't divide TP:
+        # q seq-sharded, k/v gathered, scores/softmax/out stay seq-local.
+        q = shardctx.constrain_seq_parallel_q(q, h)
+    qg = _grouped(q, g)                               # (B,S,G,Hg,D)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bsghd,btgd->bghst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qpos = jnp.arange(s) + q_offset                   # (S,)
+    kpos = jnp.arange(t)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    if kv_len is not None:                            # decode: valid cache len
+        mask &= kpos[None, :] < jnp.asarray(kv_len)[..., None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bghst,btgd->bsghd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      q_offset: int = 0, chunk: int = 512,
+                      softcap: float = 0.0) -> jax.Array:
+    """Online-softmax attention scanned over query chunks (XLA flash).
+
+    Memory is O(chunk * T) instead of O(S * T); this is the lowering used for
+    the 32k prefill cells and the oracle for the Pallas flash kernel.
+    """
+    b, s, h, d = q.shape
+    t, g = k.shape[1], k.shape[2]
+    if s % chunk != 0:
+        return full_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, softcap=softcap)
+    n_chunks = s // chunk
+    qg = _grouped(q, g).reshape(b, n_chunks, chunk, g, h // g, d)
+    qg = jnp.moveaxis(qg, 1, 0)                       # (N,B,c,G,Hg,D)
+    scale = 1.0 / math.sqrt(d)
+    kpos = jnp.arange(t)
+
+    def body(carry, inp):
+        from repro.models import shardctx
+        qc, idx = inp                                 # (B,c,G,Hg,D)
+        qc = shardctx.constrain_qchunk(qc, h)
+        scores = jnp.einsum("bcghd,btgd->bghct", qc.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        if softcap:
+            scores = jnp.tanh(scores / softcap) * softcap
+        qpos = idx * chunk + jnp.arange(chunk) + q_offset
+        mask = jnp.ones((chunk, t), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        scores = jnp.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bghct,btgd->bcghd", probs, v.astype(jnp.float32))
+        return carry, out
+
+    _, outs = lax.scan(body, None, (qg, jnp.arange(n_chunks)))
+    outs = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, d)
+    return outs.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, window: int = 0,
+                     softcap: float = 0.0) -> jax.Array:
+    """Single-token attention against a cache. q:(B,1,H,D), cache:(B,T,KVH,D)."""
+    return full_attention(q, k_cache, v_cache, causal=False, window=0,
+                          kv_len=kv_len, softcap=softcap)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+
+def gqa_defs(cfg: ModelConfig) -> Params:
+    d, h, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, g, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, g, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((h, hd, d), ("heads", "head_dim", "embed"),
+                       scale=1.0 / math.sqrt(2.0 * max(cfg.n_layers, 1))),
+    }
+
+
+def gqa_cache_defs(cfg: ModelConfig, batch: int, cache_len: int) -> Params:
+    g, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if cfg.kv_replicate_to:
+        g = cfg.kv_replicate_to
+    shape = (batch, cache_len, g, hd)
+    axes = ("batch", "kv_seq", "kv_heads", "head_dim")
+    cd = jnp.dtype(cfg.cache_dtype)
+    return {"k": ParamDef(shape, axes, "zeros", dtype=cd),
+            "v": ParamDef(shape, axes, "zeros", dtype=cd)}
+
+
+def gqa_apply(p: Params, cfg: ModelConfig, x: jax.Array, *,
+              positions: jax.Array, causal: bool = True,
+              cache: Optional[Params] = None,
+              cache_index: Optional[jax.Array] = None,
+              cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+              return_kv: bool = False,
+              ) -> Tuple[jax.Array, Optional[Params]]:
+    """Returns (output, updated_cache_or_new_kv).
+
+    Decode (``cache`` given): single-token attention against the cache. The
+    cache may be a *ring buffer* (windowed archs size it at ``window``): the
+    write slot is ``index % cache_len`` so a 500k-token stream runs in O(W)
+    memory — the TPU analogue of a sliding KV window.
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    xq = x.astype(cd)
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(cd))
+    if cross_kv is not None:
+        k, v = cross_kv
+    else:
+        k = jnp.einsum("bsd,dgk->bsgk", xq, p["wk"].astype(cd))
+        v = jnp.einsum("bsd,dgk->bsgk", xq, p["wv"].astype(cd))
+        if cfg.use_rope and cfg.pos_embed == "rope":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.kv_replicate_to and cross_kv is None and (
+            cache is not None or return_kv):
+        # vLLM-style KV replication: duplicate each kv head tp/G times so
+        # the cache shards kv_heads->model and decode attention is fully
+        # local.  q-to-slot grouping stays contiguous, so attention is
+        # mathematically identical (each q head sees its own kv head).
+        rep = cfg.kv_replicate_to // k.shape[2]
+        if rep > 1:
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+    new_cache = None
+    if cache is not None and cross_kv is None:
+        idx = cache_index
+        cache_len = cache["k"].shape[1]
+        wpos = idx % cache_len                         # ring-buffer write slot
+        k_cache = lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), wpos, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), wpos, axis=1)
+        new_cache = {"k": k_cache, "v": v_cache}
+        kv_len = jnp.minimum(idx + x.shape[1], cache_len)
+        out = decode_attention(q, k_cache.astype(cd), v_cache.astype(cd),
+                               kv_len=kv_len, softcap=cfg.logit_softcap)
+    elif x.shape[1] >= 8192:
+        # forward-only regime (prefill): chunked online-softmax; training
+        # lengths use the plain path whose vjp is the standard attention bwd
+        out = chunked_attention(q, k, v, causal=causal,
+                                window=cfg.window_size,
+                                softcap=cfg.logit_softcap)
+    else:
+        out = full_attention(q, k, v, causal=causal, window=cfg.window_size,
+                             softcap=cfg.logit_softcap)
+    if return_kv and cross_kv is None and cache is None:
+        new_cache = {"k": k, "v": v}
+    rd = jnp.dtype(cfg.reduce_dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(rd), p["wo"].astype(rd),
+                   preferred_element_type=rd)
+    return y.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    out_scale = 1.0 / math.sqrt(2.0 * max(cfg.n_layers, 1))
+    if cfg.activation in ("swiglu", "geglu"):
+        return {"w_gate": dense(d, f, "embed", "mlp"),
+                "w_up": dense(d, f, "embed", "mlp"),
+                "w_down": dense(f, d, "mlp", "embed", scale=out_scale)}
+    return {"w_up": dense(d, f, "embed", "mlp"),
+            "w_down": dense(f, d, "mlp", "embed", scale=out_scale)}
+
+
+def mlp_apply(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    cd = jnp.dtype(cfg.compute_dtype)
+    rd = jnp.dtype(cfg.reduce_dtype)
+    xq = x.astype(cd)
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(xq @ p["w_gate"].astype(cd)) * (xq @ p["w_up"].astype(cd))
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(xq @ p["w_gate"].astype(cd)) * (xq @ p["w_up"].astype(cd))
+    elif cfg.activation == "relu2":
+        h = jnp.square(jax.nn.relu(xq @ p["w_up"].astype(cd)))
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(xq @ p["w_up"].astype(cd))
+    else:
+        raise ValueError(cfg.activation)
+    # row-parallel matmul: partial sums cross the wire in reduce_dtype
+    return jnp.einsum("bsf,fd->bsd", h.astype(rd), p["w_down"].astype(rd),
+                      preferred_element_type=rd).astype(x.dtype)

@@ -1,0 +1,141 @@
+"""LMEngine — replica-exchange SGLD (parallel tempering) over LM training.
+
+This is the engine-agnosticism payoff: the SAME RepEx driver that runs MD
+runs an *ensemble of LM training replicas*.  Each replica trains the
+assigned architecture with AdamW + Langevin noise scaled by its ladder
+temperature; the 'energy' is the held-out loss scaled by beta, so the
+Metropolis exchange moves hot (exploratory) replicas' temperatures onto
+whichever parameters are currently worst — classic RE-SGLD.
+
+propagate == n optimizer steps (the 'MD phase' of the paper; a straggler
+LM replica is a slow host/preempted chip).  The replica axis is the
+ensemble axis the Execution Modes shard or wave over.
+
+Optionally applies error-feedback int8 gradient compression inside the
+step — the wire format a bandwidth-bound data-parallel mesh would ship.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.config import ModelConfig, TrainConfig
+from repro.data import SyntheticLMDataset
+from repro.models.lm import LM
+from repro.models.params import init_params
+from repro.optim import (adamw_update, sgld_noise)
+from repro.optim.adamw import AdamWState
+from repro.optim.compression import (ef_int8_compress_tree,
+                                     ef_int8_decompress_tree,
+                                     zero_error_tree)
+
+
+class LMEngine:
+    def __init__(self, cfg: ModelConfig, tcfg: Optional[TrainConfig] = None,
+                 batch_size: int = 8, seq_len: int = 64,
+                 pool_batches: int = 8, noise_per_kelvin: float = 1e-7,
+                 energy_scale: float = 1.0, data_seed: int = 0,
+                 grad_compression: bool = False):
+        self.cfg = cfg
+        self.tcfg = tcfg or TrainConfig(learning_rate=1e-3, warmup_steps=10,
+                                        total_steps=10_000)
+        self.lm = LM(cfg)
+        self.noise_per_kelvin = noise_per_kelvin
+        self.energy_scale = energy_scale
+        self.grad_compression = grad_compression
+        ds = SyntheticLMDataset(cfg.vocab_size, seq_len, batch_size,
+                                seed=data_seed)
+        pool = [ds.next_batch() for _ in range(pool_batches)]
+        self.pool = {k: jnp.stack([b[k] for b in pool]) for k in pool[0]}
+        self.eval_batch = ds.next_batch()
+
+    # -- protocol ----------------------------------------------------------
+
+    def init_state(self, rng: jax.Array, n_replicas: int):
+        keys = jax.random.split(rng, n_replicas)
+
+        def one(key):
+            params = init_params(key, self.lm.param_defs())
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            state = {"params": params, "mu": zeros,
+                     "nu": jax.tree.map(jnp.zeros_like, zeros),
+                     "step": jnp.zeros((), jnp.int32)}
+            if self.grad_compression:
+                state["err"] = zero_error_tree(params)
+            return state
+
+        return jax.vmap(one)(keys)
+
+    def _one_step(self, rstate, batch, temperature, key):
+        tcfg = self.tcfg
+
+        def loss_fn(p):
+            loss, m = self.lm.loss(p, batch)
+            return loss, m
+
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            rstate["params"])
+        if self.grad_compression:
+            q, scales, new_err = ef_int8_compress_tree(grads, rstate["err"])
+            grads = ef_int8_decompress_tree(q, scales)
+        opt = AdamWState(rstate["step"], rstate["mu"], rstate["nu"])
+        new_p, new_opt, om = adamw_update(tcfg, rstate["params"], grads, opt)
+        # tempered Langevin noise — the RepEx coupling
+        new_p = sgld_noise(key, new_p, om["lr"],
+                           temperature * self.noise_per_kelvin)
+        out = {"params": new_p, "mu": new_opt.mu, "nu": new_opt.nu,
+               "step": new_opt.step}
+        if self.grad_compression:
+            out["err"] = new_err
+        return out, loss
+
+    def propagate(self, state, ctrl, n_steps, rngs, max_steps: int = 0):
+        max_steps = max_steps or int(jnp.max(n_steps))
+        pool = self.pool
+        n_pool = pool["tokens"].shape[0]
+        keys = rngs
+
+        def one(rstate, ctrl_row, n, key):
+            temp = ctrl_row["temperature"]
+
+            def body(t, rs):
+                batch = jax.tree.map(lambda x: x[rs["step"] % n_pool], pool)
+                new_rs, _ = self._one_step(rs, batch, temp,
+                                           jax.random.fold_in(key, t))
+                active = t < n
+                return jax.tree.map(
+                    lambda new, old: jnp.where(
+                        jnp.reshape(active, (1,) * new.ndim), new, old),
+                    new_rs, rs)
+
+            return lax.fori_loop(0, max_steps, body, rstate)
+
+        return jax.vmap(one)(state, ctrl, n_steps, keys)
+
+    def _eval_loss(self, rstate):
+        loss, _ = self.lm.loss(rstate["params"],
+                               jax.tree.map(jnp.asarray, self.eval_batch))
+        return loss
+
+    def energy(self, state, ctrl):
+        losses = jax.vmap(self._eval_loss)(state)
+        return ctrl["beta"] * losses * self.energy_scale
+
+    def cross_energy(self, state, ctrl_grid):
+        losses = jax.vmap(self._eval_loss)(state)           # (R,)
+        return (losses[:, None] * ctrl_grid["beta"][None, :]
+                * self.energy_scale)
+
+    def is_failed(self, state):
+        def leaf_bad(x):
+            if not jnp.issubdtype(x.dtype, jnp.floating):
+                return jnp.zeros(x.shape[0], bool)
+            return jnp.any(~jnp.isfinite(x), axis=tuple(range(1, x.ndim)))
+        bad = jax.tree.map(leaf_bad, state)
+        return functools.reduce(jnp.logical_or, jax.tree.leaves(bad))

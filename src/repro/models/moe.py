@@ -1,0 +1,126 @@
+"""Mixture-of-Experts layer (DeepSeek-style: shared + routed top-k).
+
+Dispatch is GShard-style with *per-batch-row* capacity so that, with the
+batch sharded over the data axes and experts sharded over the model axis,
+routing/scatter/gather stay device-local and the only collective is the
+row-parallel reduce over experts (same shape as a Megatron all-reduce).
+All shapes are static — dry-run friendly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models.params import ParamDef, dense
+
+Params = Dict[str, Any]
+
+
+def moe_defs(cfg: ModelConfig) -> Params:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    out_scale = 1.0 / math.sqrt(2.0 * max(cfg.n_layers, 1))
+    defs: Params = {
+        "router": ParamDef((d, e), ("embed", None)),
+        "w_gate": ParamDef((e, d, f), ("experts", "embed", "expert_mlp")),
+        "w_up": ParamDef((e, d, f), ("experts", "embed", "expert_mlp")),
+        "w_down": ParamDef((e, f, d), ("experts", "expert_mlp", "embed"),
+                           scale=out_scale),
+    }
+    if m.num_shared_experts:
+        fs = m.d_ff_expert * m.num_shared_experts
+        defs["shared"] = {
+            "w_gate": dense(d, fs, "embed", "mlp"),
+            "w_up": dense(d, fs, "embed", "mlp"),
+            "w_down": dense(fs, d, "mlp", "embed", scale=out_scale),
+        }
+    return defs
+
+
+def capacity(cfg: ModelConfig, seq: int) -> int:
+    m = cfg.moe
+    c = int(math.ceil(m.top_k * seq * m.capacity_factor / m.num_experts))
+    return max(8, min(c, seq * m.top_k))
+
+
+def _route_row(logits: jax.Array, k: int, e: int, cap: int):
+    """Per-row routing. logits: (S, E) -> dispatch metadata (static shapes)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_ids = lax.top_k(probs, k)                    # (S, k)
+    top_w = top_w / (jnp.sum(top_w, -1, keepdims=True) + 1e-9)
+    flat_ids = top_ids.reshape(-1)                          # (S*k,)
+    onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)   # (S*k, E)
+    pos = jnp.cumsum(onehot, axis=0) * onehot               # rank within expert
+    pos_in_e = jnp.sum(pos, axis=-1) - 1                    # (S*k,)
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, pos_in_e, cap)                   # overflow -> spill
+    return probs, top_w.reshape(-1), flat_ids, slot, keep
+
+
+def moe_apply(p: Params, cfg: ModelConfig, x: jax.Array
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, D) -> (y, aux_losses)."""
+    m = cfg.moe
+    cd = jnp.dtype(cfg.compute_dtype)
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    cap = capacity(cfg, s)
+    xq = x.astype(cd)
+
+    from repro.models import shardctx
+    # Router logits are tiny ((B,S,E)); they stay replicated over `model`
+    # so top_k and the scatter below are device-local.
+    logits = jnp.einsum("bsd,de->bse", xq, p["router"].astype(cd))
+    # gather FSDP weight shards at the use site (bf16, ~1 GiB) instead of
+    # letting XLA all-reduce f32 expert activations (~5 GiB x3 per layer)
+    w_gate = shardctx.constrain_expert_weight(p["w_gate"].astype(cd), e)
+    w_up = shardctx.constrain_expert_weight(p["w_up"].astype(cd), e)
+    w_down = shardctx.constrain_expert_weight(p["w_down"].astype(cd), e)
+
+    def row(logits_row, x_row):
+        probs, w, ids, slot, keep = _route_row(logits_row, k, e, cap)
+        # dispatch via an int32 INDEX scatter (E x cap, ~100 KB — freely
+        # replicable) followed by a batch-local token gather, instead of
+        # scattering 2 GiB of token vectors into an expert-sharded buffer
+        # (which XLA could only partition by all-gathering the batch).
+        tok_ids = jnp.arange(s * k, dtype=jnp.int32) // k   # source token
+        idx_buf = jnp.full((e, cap + 1), s, jnp.int32)      # sentinel = pad
+        idx_buf = idx_buf.at[ids, slot].set(tok_ids)
+        x_pad = jnp.concatenate([x_row, jnp.zeros((1, d), cd)], axis=0)
+        buf = x_pad[idx_buf[:, :cap]]                       # (E, cap, D)
+        # expert FFN, batched over experts
+        hg = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate))
+        hu = jnp.einsum("ecd,edf->ecf", buf, w_up)
+        out_buf = jnp.einsum("ecf,efd->ecd", hg * hu, w_down)
+        out_buf = jnp.concatenate([out_buf, jnp.zeros((e, 1, d), cd)], axis=1)
+        # combine
+        gathered = out_buf[ids, jnp.where(keep, slot, cap)]  # (S*k, D)
+        gathered = gathered * (w * keep.astype(jnp.float32)).astype(cd)[:, None]
+        y_row = jnp.sum(gathered.reshape(s, k, d), axis=1)
+        # aux stats
+        frac_tokens = jnp.mean(
+            jax.nn.one_hot(ids, e, dtype=jnp.float32), axis=0)
+        frac_probs = jnp.mean(probs, axis=0)
+        aux = e * jnp.sum(frac_tokens * frac_probs)
+        zloss = jnp.mean(jax.nn.logsumexp(logits_row.astype(jnp.float32),
+                                          axis=-1) ** 2)
+        dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+        return y_row, aux, zloss, dropped
+
+    y, aux, zloss, dropped = jax.vmap(row)(logits, xq)
+    y = y.astype(x.dtype)
+    if m.num_shared_experts:
+        sp = p["shared"]
+        hs = jax.nn.silu(xq @ sp["w_gate"].astype(cd)) * (xq @ sp["w_up"].astype(cd))
+        y = y + (hs @ sp["w_down"].astype(cd)).astype(x.dtype)
+    losses = {
+        "moe_aux": jnp.mean(aux) * m.aux_loss_coef,
+        "moe_z": jnp.mean(zloss) * m.router_z_coef,
+        "moe_dropped": jnp.mean(dropped),
+    }
+    return y, losses

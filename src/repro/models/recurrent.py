@@ -1,0 +1,332 @@
+"""Recurrent sequence-mixing cells: RG-LRU (Griffin/RecurrentGemma),
+mLSTM and sLSTM (xLSTM).
+
+Each cell exposes:
+  *_defs        — ParamDefs
+  *_scan        — full-sequence form for train/prefill
+                  (RG-LRU: associative scan; mLSTM: decay-masked parallel
+                  form chunked over query blocks; sLSTM: lax.scan over time)
+  *_step        — O(1)-state decode update (this is what makes the
+                  ``long_500k`` cell tractable: state size is independent of
+                  context length)
+  *_state_defs  — decode-state ParamDefs
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models.params import ParamDef
+
+Params = Dict[str, Any]
+
+_LRU_C = 8.0   # Griffin's fixed gate sharpness
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (shared by all recurrent blocks)
+# ---------------------------------------------------------------------------
+
+
+def conv_defs(width: int, k: int) -> Params:
+    return {"conv_w": ParamDef((k, width), ("conv_k", "rec_state")),
+            "conv_b": ParamDef((width,), ("rec_state",), "zeros")}
+
+
+def causal_conv(p: Params, x: jax.Array) -> jax.Array:
+    """x: (B, S, W) depthwise causal conv, kernel k."""
+    k = p["conv_w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * p["conv_w"][i].astype(x.dtype)
+              for i in range(k))
+    return out + p["conv_b"].astype(x.dtype)
+
+
+def causal_conv_step(p: Params, buf: jax.Array, x: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Decode: buf (B, k-1, W) holds the last k-1 inputs."""
+    k = p["conv_w"].shape[0]
+    window = jnp.concatenate([buf, x[:, None, :].astype(buf.dtype)], axis=1)
+    out = jnp.einsum("bkw,kw->bw", window.astype(jnp.float32),
+                     p["conv_w"].astype(jnp.float32))
+    out = (out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    return out, window[:, 1:, :]                               # dtype-stable
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def rg_lru_defs(width: int, n_heads: int) -> Params:
+    hd = width // n_heads
+    return {
+        "w_i": ParamDef((n_heads, hd, hd), ("kv_heads", "rec_state", None)),
+        "w_r": ParamDef((n_heads, hd, hd), ("kv_heads", "rec_state", None)),
+        "lam": ParamDef((width,), ("rec_state",), "ones", scale=1.0),
+    }
+
+
+def _block_diag(p_w: jax.Array, x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, w = x.shape
+    xh = x.reshape(b, s, n_heads, w // n_heads)
+    return jnp.einsum("bshw,hwv->bshv", xh, p_w.astype(x.dtype)
+                      ).reshape(b, s, w)
+
+
+def _lru_coeffs(p: Params, x: jax.Array, n_heads: int):
+    r = jax.nn.sigmoid(_block_diag(p["w_r"], x, n_heads).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(p["w_i"], x, n_heads).astype(jnp.float32))
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-8)) \
+        * i * x.astype(jnp.float32)
+    return a, gated
+
+
+def rg_lru_scan(p: Params, x: jax.Array, n_heads: int) -> jax.Array:
+    """x: (B, S, W) -> h: (B, S, W) via associative scan over S."""
+    a, gated = _lru_coeffs(p, x, n_heads)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype)
+
+
+def rg_lru_step(p: Params, h_prev: jax.Array, x: jax.Array, n_heads: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    """h_prev: (B, W); x: (B, W) one token."""
+    a, gated = _lru_coeffs(p, x[:, None, :], n_heads)
+    h = a[:, 0] * h_prev.astype(jnp.float32) + gated[:, 0]
+    return h.astype(x.dtype), h.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, exponential gating)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_dims(d_inner: int, n_heads: int) -> Tuple[int, int]:
+    """(qk head dim, v head dim)."""
+    return d_inner // (2 * n_heads), d_inner // n_heads
+
+
+def mlstm_defs(d_inner: int, n_heads: int) -> Params:
+    """qkv are block-diagonal per head (xLSTM paper) — each head projects
+    its own slice of the inner dim, cutting params by n_heads x."""
+    dk, dv = mlstm_dims(d_inner, n_heads)
+    hw = d_inner // n_heads
+    return {
+        "wq": ParamDef((n_heads, hw, dk), ("kv_heads", "rec_state", None)),
+        "wk": ParamDef((n_heads, hw, dk), ("kv_heads", "rec_state", None)),
+        "wv": ParamDef((n_heads, hw, dv), ("kv_heads", "rec_state", None)),
+        "w_i": ParamDef((d_inner, n_heads), ("rec_state", "kv_heads"), "zeros"),
+        "w_f": ParamDef((d_inner, n_heads), ("rec_state", "kv_heads"), "zeros"),
+        "b_i": ParamDef((n_heads,), ("kv_heads",), "zeros"),
+        "b_f": ParamDef((n_heads,), ("kv_heads",), "ones", scale=3.0),
+        "gn": ParamDef((d_inner,), ("rec_state",), "ones"),
+    }
+
+
+def mlstm_state_defs(d_inner: int, n_heads: int, batch: int) -> Params:
+    dk, dv = mlstm_dims(d_inner, n_heads)
+    return {
+        "C": ParamDef((batch, n_heads, dk, dv),
+                      ("batch", "kv_heads", None, None), "zeros"),
+        "n": ParamDef((batch, n_heads, dk), ("batch", "kv_heads", None),
+                      "zeros"),
+        "m": ParamDef((batch, n_heads), ("batch", "kv_heads"), "zeros"),
+    }
+
+
+def _mlstm_qkvif(p: Params, x: jax.Array):
+    cd = x.dtype
+    b, s, w = x.shape
+    n_heads = p["wq"].shape[0]
+    xh = x.reshape(b, s, n_heads, w // n_heads)
+    q = jnp.einsum("bshw,hwk->bshk", xh, p["wq"].astype(cd))
+    k = jnp.einsum("bshw,hwk->bshk", xh, p["wk"].astype(cd))
+    v = jnp.einsum("bshw,hwk->bshk", xh, p["wv"].astype(cd))
+    i_t = (jnp.einsum("bsw,wh->bsh", x, p["w_i"].astype(cd))
+           .astype(jnp.float32) + p["b_i"].astype(jnp.float32))
+    f_t = (jnp.einsum("bsw,wh->bsh", x, p["w_f"].astype(cd))
+           .astype(jnp.float32) + p["b_f"].astype(jnp.float32))
+    return q, k, v, i_t, f_t
+
+
+def _groupnorm(p: Params, h: jax.Array, n_heads: int) -> jax.Array:
+    """Per-head groupnorm over the flattened (B,S,W) activations."""
+    b, s, w = h.shape
+    hh = h.reshape(b, s, n_heads, w // n_heads).astype(jnp.float32)
+    mu = jnp.mean(hh, -1, keepdims=True)
+    var = jnp.var(hh, -1, keepdims=True)
+    out = (hh - mu) * lax.rsqrt(var + 1e-5)
+    return (out.reshape(b, s, w) * p["gn"].astype(jnp.float32)).astype(h.dtype)
+
+
+def mlstm_parallel(p: Params, x: jax.Array, n_heads: int,
+                   chunk: int = 512) -> jax.Array:
+    """Decay-masked parallel form, scanned over query chunks.
+
+    D_ij = F_i - F_j + itilde_j (j <= i); row-stabilized by m_i = max_j D_ij.
+    """
+    b, s, w = x.shape
+    dk, dv = mlstm_dims(w, n_heads)
+    q, k, v, i_t, f_t = _mlstm_qkvif(p, x)
+    logf = jax.nn.log_sigmoid(f_t)                       # (B,S,H)
+    F = jnp.cumsum(logf, axis=1)                         # inclusive cumsum
+    scale = 1.0 / math.sqrt(dk)
+    if s % chunk != 0:
+        chunk = s
+    n_chunks = s // chunk
+
+    def body(_, idx):
+        sl = lambda arr: lax.dynamic_slice_in_dim(arr, idx * chunk, chunk, 1)
+        qc, Fc, pos_c = sl(q), sl(F), idx * chunk + jnp.arange(chunk)
+        # D matrix: (B, H, c, S)
+        D = (Fc.transpose(0, 2, 1)[:, :, :, None]
+             - F.transpose(0, 2, 1)[:, :, None, :]
+             + i_t.transpose(0, 2, 1)[:, :, None, :])
+        causal = pos_c[:, None] >= jnp.arange(s)[None, :]
+        D = jnp.where(causal[None, None], D, -jnp.inf)
+        m = jnp.maximum(jnp.max(D, axis=-1, keepdims=True), 0.0)
+        Dm = jnp.exp(D - m)
+        scores = jnp.einsum("bchk,bshk->bhcs", qc.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale * Dm
+        norm = jnp.maximum(jnp.abs(jnp.sum(scores, -1, keepdims=True)),
+                           jnp.exp(-m))
+        probs = scores / norm
+        out = jnp.einsum("bhcs,bshv->bchv", probs, v.astype(jnp.float32))
+        return _, out.reshape(b, chunk, w)
+
+    _, outs = lax.scan(body, None, jnp.arange(n_chunks))
+    h = jnp.moveaxis(outs, 0, 1).reshape(b, s, w).astype(x.dtype)
+    return _groupnorm(p, h, n_heads)
+
+
+def mlstm_final_state(p: Params, x: jax.Array, n_heads: int) -> Params:
+    """Closed-form final (C, n, m) after processing x — equals the step
+    recursion exactly: m_T = max(F_T, max_j(F_T - F_j + i_j)),
+    C_T = sum_j exp(F_T - F_j + i_j - m_T) k_j v_j^T.
+    """
+    b, s, w = x.shape
+    q, k, v, i_t, f_t = _mlstm_qkvif(p, x)
+    logf = jax.nn.log_sigmoid(f_t)
+    F = jnp.cumsum(logf, axis=1)
+    FT = F[:, -1]                                        # (B,H)
+    d = FT[:, None] - F + i_t                            # (B,S,H)
+    m = jnp.maximum(FT, jnp.max(d, axis=1))              # (B,H)
+    wgt = jnp.exp(d - m[:, None])                        # (B,S,H)
+    C = jnp.einsum("bsh,bshk,bshv->bhkv", wgt, k.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    n = jnp.einsum("bsh,bshk->bhk", wgt, k.astype(jnp.float32))
+    return {"C": C, "n": n, "m": m}
+
+
+def mlstm_step(p: Params, state: Params, x: jax.Array, n_heads: int
+               ) -> Tuple[jax.Array, Params]:
+    """x: (B, 1, W) -> (h, new_state). Stabilized recurrent update."""
+    b, _, w = x.shape
+    dk, dv = mlstm_dims(w, n_heads)
+    q, k, v, i_t, f_t = _mlstm_qkvif(p, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                  # (B,H,dk/dv)
+    i_t, f_t = i_t[:, 0], f_t[:, 0]                      # (B,H)
+    logf = jax.nn.log_sigmoid(f_t)
+    m_prev, C_prev, n_prev = state["m"], state["C"], state["n"]
+    m_new = jnp.maximum(logf + m_prev, i_t)
+    f_sc = jnp.exp(logf + m_prev - m_new)[..., None, None]
+    i_sc = jnp.exp(i_t - m_new)[..., None, None]
+    kv = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32),
+                    v.astype(jnp.float32))
+    C = f_sc * C_prev + i_sc * kv
+    n = f_sc[..., 0] * n_prev + i_sc[..., 0] * k.astype(jnp.float32)
+    scale = 1.0 / math.sqrt(dk)
+    num = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32) * scale, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh",
+                                         q.astype(jnp.float32) * scale, n)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(b, 1, w).astype(x.dtype)
+    h = _groupnorm(p, h, n_heads)
+    return h, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, block-diagonal recurrence)
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(d_inner: int, n_heads: int) -> Params:
+    hd = d_inner // n_heads
+    return {
+        "w_in": ParamDef((d_inner, 4 * d_inner), ("rec_state", None)),
+        "r": ParamDef((4, n_heads, hd, hd), (None, "kv_heads", "rec_state",
+                                             None), scale=0.5),
+        "b": ParamDef((4 * d_inner,), (None,), "zeros"),
+        "gn": ParamDef((d_inner,), ("rec_state",), "ones"),
+    }
+
+
+def slstm_state_defs(d_inner: int, batch: int) -> Params:
+    ax = ("batch", "rec_state")
+    z = lambda: ParamDef((batch, d_inner), ax, "zeros")
+    return {"c": z(), "n": z(), "h": z(), "m": z()}
+
+
+def _slstm_cell(p: Params, n_heads: int, state, pre):
+    """One time-step. pre: (B, 4*W) input preactivations."""
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    b_sz, w = h.shape
+    hd = w // n_heads
+    hh = h.reshape(b_sz, n_heads, hd)
+    rec = jnp.einsum("bhw,ghwv->gbhv", hh, p["r"].astype(jnp.float32))
+    rec = rec.reshape(4, b_sz, w)
+    pre = pre.astype(jnp.float32) + p["b"].astype(jnp.float32)
+    it, ft, zt, ot = jnp.split(pre, 4, axis=-1)
+    it, ft = it + rec[0], ft + rec[1]
+    zt = jnp.tanh(zt + rec[2])
+    ot = jax.nn.sigmoid(ot + rec[3])
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_sc = jnp.exp(it - m_new)
+    f_sc = jnp.exp(logf + m - m_new)
+    c_new = f_sc * c + i_sc * zt
+    n_new = jnp.maximum(f_sc * n + i_sc, 1.0)
+    h_new = ot * c_new / n_new
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_scan(p: Params, x: jax.Array, n_heads: int,
+               return_state: bool = False):
+    """x: (B, S, W) -> (B, S, W) via lax.scan over time."""
+    b, s, w = x.shape
+    pre = jnp.einsum("bsw,wv->bsv", x, p["w_in"].astype(x.dtype))
+    state0 = {k: jnp.zeros((b, w), jnp.float32) for k in ("c", "n", "h", "m")}
+
+    def body(state, pre_t):
+        new = _slstm_cell(p, n_heads, state, pre_t)
+        return new, new["h"]
+
+    final, hs = lax.scan(body, state0, jnp.moveaxis(pre, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    h = _groupnorm(p, h, n_heads)
+    if return_state:
+        return h, final
+    return h
+
+
+def slstm_step(p: Params, state: Params, x: jax.Array, n_heads: int
+               ) -> Tuple[jax.Array, Params]:
+    """x: (B, 1, W)."""
+    pre = jnp.einsum("bw,wv->bv", x[:, 0], p["w_in"].astype(x.dtype))
+    new = _slstm_cell(p, n_heads, state, pre)
+    h = new["h"][:, None, :].astype(x.dtype)
+    return _groupnorm(p, h, n_heads), new

@@ -1,0 +1,87 @@
+"""Model registry: build LMs, count params, produce dry-run input specs."""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ShapeCell
+from repro.models.lm import LM
+from repro.models.params import is_def
+
+ARCH_IDS = (
+    "mistral_large_123b", "phi3_medium_14b", "olmo_1b", "nemotron_4_15b",
+    "whisper_small", "xlstm_1_3b", "deepseek_v2_lite_16b", "deepseek_moe_16b",
+    "recurrentgemma_9b", "internvl2_26b",
+)
+
+
+def normalize(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str, **overrides) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{normalize(arch)}")
+    cfg = mod.config()
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{normalize(arch)}")
+    return mod.smoke_config()
+
+
+def build(cfg: ModelConfig) -> LM:
+    return LM(cfg)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    defs = LM(cfg).param_defs()
+    return sum(int(np.prod(d.shape))
+               for d in jax.tree.leaves(defs, is_leaf=is_def))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell,
+                batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell.
+
+    No device allocation — safe on the 512-placeholder-device dry-run host.
+    Modality frontends are stubs per the assignment: whisper gets precomputed
+    frame embeddings, internvl gets precomputed patch embeddings.
+    """
+    b = batch_override or cell.global_batch
+    s = cell.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    if cell.kind in ("train", "prefill"):
+        text = s
+        specs: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            text = s - cfg.n_image_tokens
+            specs["pixel_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_image_tokens, cfg.d_model), f32)
+        if cfg.family == "encdec":
+            specs["audio_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq_len, cfg.d_model), f32)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, text), i32)
+        if cell.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, text), i32)
+        return specs
+
+    # decode: one new token against a cache/state of length seq_len
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def applicable(cfg: ModelConfig, cell: ShapeCell) -> Optional[str]:
+    """None if the (arch x cell) is runnable; else a skip reason."""
+    if cell.name == "long_500k" and not cfg.subquadratic:
+        return ("full-attention arch: 524k dense-attention decode is the "
+                "defining non-goal; skipped per assignment")
+    return None

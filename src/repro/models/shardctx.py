@@ -1,0 +1,116 @@
+"""Ambient activation-sharding context.
+
+Model code is mesh-agnostic; launchers opt in to explicit activation
+constraints (batch axes + vocab axis) so the XLA SPMD solver cannot drift
+off the intended batch sharding inside deep scans.  No-op unless a
+launcher calls ``set_activation_sharding`` (CPU tests run unconstrained
+on a single device).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: Optional[Tuple[str, ...]] = None
+_MODEL_AXIS: Optional[str] = None
+_AXIS_SIZES: dict = {}
+
+
+def set_activation_sharding(batch_axes: Optional[Tuple[str, ...]],
+                            model_axis: Optional[str] = "model",
+                            axis_sizes: Optional[dict] = None) -> None:
+    """``axis_sizes`` must be passed explicitly ({axis: size}) — the
+    abstract mesh is not visible while tracing under `with mesh:`."""
+    global _BATCH_AXES, _MODEL_AXIS, _AXIS_SIZES
+    _BATCH_AXES = tuple(batch_axes) if batch_axes else None
+    _MODEL_AXIS = model_axis
+    _AXIS_SIZES = dict(axis_sizes or {})
+
+
+def clear() -> None:
+    set_activation_sharding(None, None, None)
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin dim 0 to the batch axes, replicate the rest."""
+    if _BATCH_AXES is None or getattr(x, "ndim", 0) < 1:
+        return x
+    if x.shape[0] % _prod_size() != 0:
+        return x
+    spec = P(_BATCH_AXES, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_logits(x: jax.Array) -> jax.Array:
+    """(B, S, V): batch over data axes, vocab over the model axis."""
+    if _BATCH_AXES is None or x.ndim != 3:
+        return x
+    if x.shape[0] % _prod_size() != 0:
+        return x
+    spec = P(_BATCH_AXES, None, _MODEL_AXIS)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_seq_parallel_q(q: jax.Array, n_heads_total: int) -> jax.Array:
+    """q (B, S, H, D): when the head count does not divide the model axis
+    (phi3 40H, whisper 12H vs 16-way TP), run *context-parallel attention*:
+    shard the query sequence over the model axis so the O(S*T) score
+    tensor is sharded S-wise and never replicates.  No-op when heads
+    divide TP (ordinary Megatron head sharding propagates)."""
+    if _BATCH_AXES is None or q.ndim != 4:
+        return q
+    msize = _axis_len(_MODEL_AXIS)
+    if msize <= 1 or n_heads_total % msize == 0:
+        return q
+    if q.shape[1] % msize != 0:
+        return q
+    spec = P(_BATCH_AXES, _MODEL_AXIS, None, None)
+    return jax.lax.with_sharding_constraint(q, spec)
+
+
+def constrain_qchunk(qc: jax.Array, n_heads_total: int) -> jax.Array:
+    """qc (B, c, G, Hg, D) inside the chunked-attention scan: for archs
+    whose head count doesn't divide TP, shard the chunk dim over the model
+    axis (context parallelism inside the chunk loop).  Prevents XLA from
+    'helpfully' sharding head_dim and all-reducing 5 GiB f32 score chunks
+    per layer per chunk."""
+    if _BATCH_AXES is None or qc.ndim != 5:
+        return qc
+    msize = _axis_len(_MODEL_AXIS)
+    if msize <= 1 or n_heads_total % msize == 0:
+        return qc
+    if qc.shape[1] % msize != 0 or qc.shape[0] % _prod_size() != 0:
+        return qc
+    spec = P(_BATCH_AXES, _MODEL_AXIS, None, None, None)
+    return jax.lax.with_sharding_constraint(qc, spec)
+
+
+def constrain_expert_weight(w: jax.Array, n_experts: int) -> jax.Array:
+    """Expert weights (E, d_in, d_out) at their USE site: experts over the
+    model axis, other dims gathered.  Forces the partitioner to all-gather
+    the (small, bf16) FSDP weight shards once per layer instead of
+    all-reducing the (huge, f32) expert activations — the classic
+    FSDP gather-weights-not-activations policy, stated explicitly."""
+    if _BATCH_AXES is None or w.ndim != 3:
+        return w
+    msize = _axis_len(_MODEL_AXIS)
+    if msize <= 1:
+        return w
+    e_spec = _MODEL_AXIS if n_experts % msize == 0 else None
+    spec = P(e_spec, None, None)
+    return jax.lax.with_sharding_constraint(w, spec)
+
+
+def _axis_len(axis: Optional[str]) -> int:
+    if axis is None:
+        return 1
+    return _AXIS_SIZES.get(axis, 1)
+
+
+def _prod_size() -> int:
+    size = 1
+    for ax in _BATCH_AXES or ():
+        size *= _AXIS_SIZES.get(ax, 1)
+    return size

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               clip_by_global_norm, lr_schedule)
+from repro.optim.compression import (ef_int8_compress_tree,
+                                     ef_int8_decompress_tree)
+from repro.optim.sgld import sgld_noise

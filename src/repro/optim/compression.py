@@ -1,0 +1,44 @@
+"""Error-feedback int8 gradient compression.
+
+A distributed-optimization trick for bandwidth-bound meshes: gradients are
+quantized to int8 (per-tensor scale) before the data-parallel all-reduce and
+the quantization error is fed back into the next step's gradient (EF-SGD,
+Karimireddy et al.).  4x fewer bytes on the wire; the error-feedback term
+keeps convergence unbiased.
+
+Usage inside a train step:
+    q, scales, new_err = ef_int8_compress_tree(grads, err)
+    q = lax.pmean-style all-reduce of q (int32 accumulate)
+    grads = ef_int8_decompress_tree(q, scales)
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _compress(g: jax.Array, err: jax.Array):
+    g32 = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, g32 - deq
+
+
+def ef_int8_compress_tree(grads, err) -> Tuple[Any, Any, Any]:
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    out = [_compress(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]),
+            treedef.unflatten([o[2] for o in out]))
+
+
+def ef_int8_decompress_tree(q, scales):
+    return jax.tree.map(lambda qq, s: qq.astype(jnp.float32) * s, q, scales)
+
+
+def zero_error_tree(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

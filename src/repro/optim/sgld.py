@@ -1,0 +1,24 @@
+"""Tempered SGLD noise — the coupling between RepEx and LM training.
+
+Replica-exchange SGLD (parallel tempering over training runs): each replica
+trains with Langevin noise scaled by its temperature; the RepEx layer swaps
+temperatures between replicas with the Metropolis criterion on the loss
+(energy).  At T -> 0 this degenerates to plain AdamW/SGD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgld_noise(rng: jax.Array, params, lr: jax.Array, temperature: jax.Array):
+    """Add sqrt(2 * lr * T) Gaussian noise to a parameter pytree."""
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(rng, len(leaves))
+    std = jnp.sqrt(jnp.maximum(2.0 * lr * temperature, 0.0))
+
+    def nz(p, k):
+        return p + (std * jax.random.normal(k, p.shape, jnp.float32)
+                    ).astype(p.dtype)
+
+    return treedef.unflatten([nz(p, k) for p, k in zip(leaves, keys)])

@@ -1,0 +1,214 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter / activation in the framework is annotated with a tuple of
+*logical* axis names.  A rules table per run-kind maps logical names to mesh
+axes; the engine checks divisibility and drops a mapping (replicates) when the
+dimension does not divide the mesh axis — this is what lets the same model
+code lower on (16,16), (2,16,16) and the 1-device CPU test mesh without
+per-arch special-casing (e.g. whisper's vocab 51865 is indivisible by 16 and
+silently falls back to replication).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# A rule maps a logical axis name to a tuple of candidate mesh-axis groups,
+# tried in order; the first whose total size divides the dimension wins.
+Rules = Dict[str, Tuple[Tuple[str, ...], ...]]
+
+# --- rule tables -----------------------------------------------------------
+# "fsdp" axes are where ZeRO-sharding happens (params over data axis);
+# "tensor" is the model axis.  On the multi-pod mesh the batch rides
+# ("pod", "data").
+
+def train_rules(multi_pod: bool) -> Rules:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    fsdp = batch  # ZeRO over full data-parallel group
+    return {
+        "batch": (batch,),
+        "embed": (fsdp,),             # FSDP shard of the residual dim
+        "vocab": (("model",),),
+        "heads": (("model",),),
+        "kv_heads": (("model",),),
+        "mlp": (("model",),),
+        "experts": (("model",),),
+        "seq": ((),),                 # activations: seq replicated in train
+        "layers": ((),),
+        "head_dim": ((),),
+        "expert_mlp": ((),),
+        "lora": ((),),
+        "rec_state": (("model",),),
+        "conv_k": ((),),
+        "capacity": ((),),
+    }
+
+
+def train_rules_pure_dp(multi_pod: bool) -> Rules:
+    """Pure data-parallel + 2D-FSDP: batch and the ZeRO shard both span
+    (data x model).  Used for archs whose head count does not divide the
+    TP axis (phi3 40H, whisper 12H) — on a fixed 16-way model axis the
+    clean design is no TP at all: scores stay batch-sharded, the only
+    collectives are the FSDP gathers/reduce-scatters."""
+    batch = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return {
+        "batch": (batch,),
+        "embed": (batch,),            # ZeRO over ALL devices
+        "vocab": ((),),
+        "heads": ((),),
+        "kv_heads": ((),),
+        "mlp": ((),),
+        "experts": ((),),
+        "seq": ((),),
+        "layers": ((),),
+        "head_dim": ((),),
+        "expert_mlp": ((),),
+        "lora": ((),),
+        "rec_state": ((),),
+        "conv_k": ((),),
+        "capacity": ((),),
+    }
+
+
+def pick_train_rules(n_heads: int, multi_pod: bool):
+    """(rules, activation batch axes, model axis or None) for this arch."""
+    tp = 16
+    if n_heads % tp == 0:
+        batch = ("pod", "data") if multi_pod else ("data",)
+        return train_rules(multi_pod), batch, "model"
+    batch = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return train_rules_pure_dp(multi_pod), batch, None
+
+
+def serve_rules(multi_pod: bool) -> Rules:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": (batch,),
+        "embed": ((),),               # weights replicated over data in serve
+        "vocab": (("model",),),
+        "heads": (("model",),),
+        "kv_heads": (("model",),),
+        # head_dim fallback: caches/projections of archs whose kv_heads
+        # don't divide TP shard the head_dim instead — the cache update
+        # stays local (seq unsharded) and decode scores psum is tiny.
+        "head_dim": (("model",),),
+        "kv_seq": ((),),
+        "mlp": (("model",),),
+        "experts": (("model",),),
+        "seq": ((),),
+        "layers": ((),),
+        "expert_mlp": ((),),
+        "lora": (("model",),),        # MLA latent cache shards on the rank
+        "rec_state": (("model",),),
+        "conv_k": ((),),
+        "capacity": ((),),
+    }
+
+
+def seqshard_serve_rules(multi_pod: bool) -> Rules:
+    """Long-context decode (batch=1): cache/state shards over data too."""
+    rules = dict(serve_rules(multi_pod))
+    rules["batch"] = ((),)            # batch=1 in long_500k
+    return rules
+
+
+def serve_rules_for(cfg, multi_pod: bool, decode: bool) -> Rules:
+    """Per-arch serving rules.
+
+    kv_heads % TP != 0 (mistral 8, phi3 10, whisper 12, nemotron 8,
+    internvl 8, MQA 1):
+      * decode:  shard q AND kv on head_dim — contraction-dim sharding on
+        both operands makes the partitioner emit partial-dot + small psum
+        instead of involuntarily rematerializing the 47 GiB cache;
+      * prefill: replicate the (small) kv projections and keep q heads
+        sharded — scores stay head-sharded and local.
+    """
+    rules = dict(serve_rules(multi_pod))
+    tp = 16
+    if cfg.n_kv_heads % tp != 0:
+        if decode:
+            rules["heads"] = ((),)          # q shards on head_dim instead
+        else:
+            rules["head_dim"] = ((),)       # replicate kv projections
+    return rules
+
+
+# --- engine ----------------------------------------------------------------
+
+# Dims earlier in this list grab mesh axes first.  This is what lets the
+# KV cache prefer kv_heads -> model when divisible (olmo, deepseek-moe)
+# and fall back to sequence-sharding the cache (flash-decode style) when
+# the arch's head count doesn't divide the axis (phi3 kv=10, whisper 12,
+# mistral 8, MQA 1).
+PRIORITY = ("batch", "heads", "kv_heads", "experts", "vocab", "mlp",
+            "rec_state", "lora", "embed", "head_dim", "kv_head_dim",
+            "kv_seq", "seq")
+
+
+def _axis_size(mesh: Mesh, group: Tuple[str, ...]) -> int:
+    size = 1
+    for ax in group:
+        size *= mesh.shape[ax]
+    return size
+
+
+def spec_for(
+    mesh: Mesh,
+    rules: Rules,
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+) -> P:
+    """Resolve logical axes to a PartitionSpec, honouring divisibility.
+
+    Dims are visited in PRIORITY order (then positional), so a
+    lower-priority dim only takes a mesh axis a higher-priority sibling
+    could not use.
+    """
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    order = sorted(
+        range(len(shape)),
+        key=lambda i: (PRIORITY.index(logical_axes[i])
+                       if logical_axes[i] in PRIORITY else len(PRIORITY), i))
+    used: set = set()
+    out: list = [None] * len(shape)
+    for i in order:
+        name, dim = logical_axes[i], shape[i]
+        placed: Optional[Tuple[str, ...]] = None
+        if name is not None:
+            for group in rules.get(name, ((),)):
+                group = tuple(ax for ax in group if ax in mesh.shape)
+                if not group:
+                    continue
+                if any(ax in used for ax in group):
+                    continue
+                if dim % _axis_size(mesh, group) == 0:
+                    placed = group
+                    break
+        if placed:
+            used.update(placed)
+            out[i] = placed if len(placed) > 1 else placed[0]
+    return P(*out)
+
+
+def sharding_for(mesh, rules, logical_axes, shape) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(mesh, rules, logical_axes, shape))
+
+
+def tree_shardings(mesh, rules, spec_tree, shape_tree):
+    """Map a pytree of logical-axes tuples + shapes to NamedShardings."""
+    return jax.tree.map(
+        lambda axes, shp: sharding_for(mesh, rules, axes, shp),
+        spec_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+def single_device_mesh() -> Mesh:
+    """1-device mesh with the production axis names (for CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

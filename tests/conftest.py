@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the real single CPU device — the 512-device flag is ONLY for
+# the dry-run launcher (repro.launch.dryrun sets it itself).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

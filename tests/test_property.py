@@ -1,0 +1,134 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config import RepExConfig
+from repro.core import build_grid, metropolis, neighbor_exchange
+from repro.core.exchange import inverse_permutation
+from repro.kernels.exchange_matrix import ref as xm_ref
+from repro.optim.compression import (ef_int8_compress_tree,
+                                     ef_int8_decompress_tree)
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+class _Analytic:
+    def __init__(self, e):
+        self.e = jnp.asarray(e, jnp.float32)
+
+    def init_state(self, rng, n):
+        return {"x": self.e[:n]}
+
+    def energy(self, state, ctrl):
+        return ctrl["beta"] * state["x"]
+
+    def is_failed(self, state):
+        return jnp.zeros(state["x"].shape[0], bool)
+
+
+@SETTINGS
+@given(
+    n_windows=st.sampled_from([2, 4, 6, 8]),
+    energies=st.lists(st.floats(-50, 50), min_size=8, max_size=8),
+    seed=st.integers(0, 2**30),
+    parity=st.integers(0, 1),
+)
+def test_exchange_is_always_a_permutation(n_windows, energies, seed, parity):
+    """No ctrl is ever lost or duplicated, whatever the energies/rng."""
+    grid = build_grid(RepExConfig(dimensions=(("temperature", n_windows),)))
+    eng = _Analytic(energies[:n_windows])
+    state = eng.init_state(None, n_windows)
+    assignment = jnp.arange(n_windows)
+    new_a, _ = neighbor_exchange(eng, state, grid, assignment, 0, parity,
+                                 jax.random.key(seed))
+    np.testing.assert_array_equal(np.sort(np.asarray(new_a)),
+                                  np.arange(n_windows))
+
+
+@SETTINGS
+@given(
+    perm=st.permutations(list(range(8))),
+)
+def test_inverse_permutation_property(perm):
+    a = jnp.asarray(perm)
+    inv = inverse_permutation(a)
+    np.testing.assert_array_equal(np.asarray(a[inv]), np.arange(8))
+    np.testing.assert_array_equal(np.asarray(inv[a]), np.arange(8))
+
+
+@SETTINGS
+@given(
+    delta=st.floats(-30, 30),
+    seed=st.integers(0, 2**30),
+)
+def test_metropolis_monotone_in_delta(delta, seed):
+    """P(accept | delta) uses one uniform: accept(d) implies accept(d' < d)
+    under the same rng."""
+    rng = jax.random.key(seed)
+    d = jnp.asarray([delta, delta - 5.0, -1e9])
+    acc = metropolis(d, rng)
+    if bool(acc[0]):
+        assert bool(acc[1])
+    assert bool(acc[2])
+
+
+@SETTINGS
+@given(
+    u_base=st.lists(st.floats(-100, 100), min_size=4, max_size=4),
+    beta=st.lists(st.floats(0.1, 3.0), min_size=3, max_size=3),
+    salt=st.lists(st.floats(0.0, 1.0), min_size=3, max_size=3),
+)
+def test_exchange_matrix_linear_in_beta(u_base, beta, salt):
+    feats = {"u_base": jnp.asarray(u_base), "u_elec": jnp.zeros(4),
+             "phi": jnp.zeros(4), "psi": jnp.zeros(4)}
+    ctrl = {"beta": jnp.asarray(beta), "salt": jnp.asarray(salt),
+            "umbrella_center": jnp.zeros((3, 2)),
+            "umbrella_k": jnp.zeros((3, 2))}
+    m = xm_ref.exchange_matrix(feats, ctrl)
+    expected = jnp.asarray(u_base)[:, None] * jnp.asarray(beta)[None, :]
+    np.testing.assert_allclose(np.asarray(m), np.asarray(expected),
+                               rtol=1e-5, atol=1e-4)
+
+
+@SETTINGS
+@given(
+    data=st.lists(st.floats(-1, 1), min_size=16, max_size=64),
+    steps=st.integers(2, 20),
+)
+def test_ef_compression_error_is_bounded(data, steps):
+    """Error feedback: the residual never exceeds one quantization step."""
+    g = jnp.asarray(data, jnp.float32)
+    err = jnp.zeros_like(g)
+    for _ in range(steps):
+        q, scale, errt = ef_int8_compress_tree({"g": g}, {"g": err})
+        err = errt["g"]
+        step_size = float(scale["g"])
+        assert float(jnp.max(jnp.abs(err))) <= step_size * 0.5 + 1e-7
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**30))
+def test_detailed_balance_two_level(seed):
+    """2-replica, 2-temperature analytic system: empirical swap acceptance
+    matches min(1, exp(-delta)) to statistical precision."""
+    grid = build_grid(RepExConfig(dimensions=(("temperature", 2),),
+                                  t_min=280, t_max=360))
+    e = [0.0, 2.0]
+    eng = _Analytic(e)
+    state = eng.init_state(None, 2)
+    beta = np.asarray(grid.values["beta"])
+    # swap acceptance: delta = (u_swap - u_self) = (b0-b1)(e1-e0)
+    delta = float((beta[0] - beta[1]) * (e[1] - e[0]))
+    p_expected = min(1.0, np.exp(-delta))
+    n, acc = 300, 0
+    key = jax.random.key(seed)
+    for i in range(n):
+        key, k = jax.random.split(key)
+        new_a, stats = neighbor_exchange(eng, state, grid, jnp.arange(2),
+                                         0, 0, k)
+        acc += int(stats["accepted"])
+    p_hat = acc / n
+    assert abs(p_hat - p_expected) < 4 * np.sqrt(
+        max(p_expected * (1 - p_expected), 1e-3) / n) + 0.02

@@ -1,0 +1,292 @@
+"""RepEx core invariants: grids, exchange correctness, patterns, modes,
+failures — the paper's claimed behaviours as executable checks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import RepExConfig
+from repro.core import (REMDDriver, build_grid, control_multiset_ok,
+                        ctrl_for_assignment, make_ensemble, metropolis,
+                        neighbor_exchange, matrix_exchange, auto_mode)
+from repro.core.exchange import inverse_permutation
+from repro.md import LJEngine, MDEngine
+
+
+# ---------------------------------------------------------------------------
+# control grids
+# ---------------------------------------------------------------------------
+
+
+def test_grid_shapes_and_values():
+    cfg = RepExConfig(dimensions=(("temperature", 6), ("umbrella", 8),
+                                  ("umbrella", 8)))
+    grid = build_grid(cfg)
+    assert grid.n_ctrl == 6 * 8 * 8 == 384      # the paper's validation run
+    t = np.asarray(grid.values["temperature"])
+    assert t.min() == pytest.approx(273.0)
+    assert t.max() == pytest.approx(373.0)
+    # geometric ladder in T
+    uniq = np.unique(t.round(6))
+    ratios = uniq[1:] / uniq[:-1]
+    np.testing.assert_allclose(ratios, ratios[0], rtol=1e-5)
+    # umbrella centers uniform on [0, 360)
+    c = np.asarray(grid.values["umbrella_center"])
+    assert c[:, 0].max() < 360.0 and c.min() >= 0.0
+
+
+def test_grid_arbitrary_ordering():
+    """TSU vs TUU vs UST — any ordering builds a consistent grid."""
+    for dims in [(("temperature", 2), ("salt", 3), ("umbrella", 4)),
+                 (("umbrella", 4), ("salt", 3), ("temperature", 2)),
+                 (("umbrella", 3), ("umbrella", 4), ("temperature", 2))]:
+        grid = build_grid(RepExConfig(dimensions=dims))
+        n = 1
+        for _, w in dims:
+            n *= w
+        assert grid.n_ctrl == n
+        for d_idx in range(len(dims)):
+            left, right = grid.neighbor_pairs(d_idx, 0)
+            assert len(left) == len(right) > 0
+            assert not set(left) & set(right)
+
+
+def test_neighbor_pairs_parity_disjoint():
+    grid = build_grid(RepExConfig(dimensions=(("temperature", 8),)))
+    l0, r0 = grid.neighbor_pairs(0, 0)
+    l1, r1 = grid.neighbor_pairs(0, 1)
+    assert set(zip(l0, r0)) == {(0, 1), (2, 3), (4, 5), (6, 7)}
+    assert set(zip(l1, r1)) == {(1, 2), (3, 4), (5, 6)}
+
+
+# ---------------------------------------------------------------------------
+# exchange correctness
+# ---------------------------------------------------------------------------
+
+
+class AnalyticEngine:
+    """Replicas with fixed scalar 'energies' — exchange math is exact."""
+
+    def __init__(self, energies):
+        self.e = jnp.asarray(energies, jnp.float32)
+
+    def init_state(self, rng, n):
+        return {"x": self.e[:n]}
+
+    def propagate(self, state, ctrl, n_steps, rngs, max_steps=0):
+        return state
+
+    def energy(self, state, ctrl):
+        return ctrl["beta"] * state["x"]
+
+    def cross_energy(self, state, grid_values):
+        return state["x"][:, None] * grid_values["beta"][None, :]
+
+    def is_failed(self, state):
+        return jnp.zeros(state["x"].shape[0], bool)
+
+
+def test_exchange_preserves_multiset():
+    cfg = RepExConfig(dimensions=(("temperature", 8),))
+    grid = build_grid(cfg)
+    eng = AnalyticEngine(np.linspace(-5, 5, 8))
+    state = eng.init_state(jax.random.key(0), 8)
+    assignment = jnp.arange(8)
+    for i in range(20):
+        assignment, stats = neighbor_exchange(
+            eng, state, grid, assignment, 0, i % 2, jax.random.key(i))
+        a = np.sort(np.asarray(assignment))
+        np.testing.assert_array_equal(a, np.arange(8))
+
+
+def test_exchange_always_accepts_when_favourable():
+    """beta increasing with E decreasing => swap always lowers the action."""
+    cfg = RepExConfig(dimensions=(("temperature", 2),), t_min=300, t_max=400)
+    grid = build_grid(cfg)
+    # replica holding cold ctrl (high beta) has HIGH energy -> swap helps
+    eng = AnalyticEngine([100.0, 0.0])
+    state = eng.init_state(jax.random.key(0), 2)
+    assignment = jnp.arange(2)
+    new_a, stats = neighbor_exchange(eng, state, grid, assignment, 0, 0,
+                                     jax.random.key(1))
+    np.testing.assert_array_equal(np.asarray(new_a), [1, 0])
+    assert float(stats["accepted"]) == 1.0
+
+
+def test_exchange_rejects_when_delta_huge():
+    cfg = RepExConfig(dimensions=(("temperature", 2),), t_min=300, t_max=400)
+    grid = build_grid(cfg)
+    eng = AnalyticEngine([0.0, 1000.0])   # favourable config already
+    state = eng.init_state(jax.random.key(0), 2)
+    new_a, stats = neighbor_exchange(eng, state, grid, jnp.arange(2), 0, 0,
+                                     jax.random.key(1))
+    np.testing.assert_array_equal(np.asarray(new_a), [0, 1])
+    assert float(stats["accepted"]) == 0.0
+
+
+def test_matrix_exchange_preserves_multiset():
+    cfg = RepExConfig(dimensions=(("temperature", 16),))
+    grid = build_grid(cfg)
+    eng = AnalyticEngine(np.random.default_rng(0).normal(size=16) * 10)
+    state = eng.init_state(jax.random.key(0), 16)
+    assignment = jnp.arange(16)
+    for i in range(5):
+        assignment, _ = matrix_exchange(eng, state, grid, assignment,
+                                        jax.random.key(i))
+    np.testing.assert_array_equal(np.sort(np.asarray(assignment)),
+                                  np.arange(16))
+
+
+def test_metropolis_bounds():
+    rng = jax.random.key(0)
+    delta = jnp.array([-100.0, 0.0, 100.0])
+    acc = metropolis(delta, rng)
+    assert bool(acc[0])          # always accept downhill
+    assert not bool(acc[2])      # never accept +100
+
+
+def test_inverse_permutation():
+    a = jnp.array([2, 0, 3, 1])
+    inv = inverse_permutation(a)
+    np.testing.assert_array_equal(np.asarray(inv[a]), np.arange(4))
+
+
+# ---------------------------------------------------------------------------
+# execution modes
+# ---------------------------------------------------------------------------
+
+
+def test_auto_mode_dispatch():
+    assert auto_mode(8, 16) == {"mode": "mode1", "n_waves": 1}
+    assert auto_mode(16, 16) == {"mode": "mode1", "n_waves": 1}
+    m = auto_mode(1000, 128)
+    assert m["mode"] == "mode2" and 1000 % m["n_waves"] == 0
+    # the paper's scenario: 10000 replicas on 128 cores
+    m = auto_mode(10000, 128)
+    assert m["mode"] == "mode2" and 10000 % m["n_waves"] == 0
+
+
+def test_mode1_mode2_equivalent_trajectories():
+    """Time-multiplexing replicas (Mode II) must not change trajectories
+    (identical per-replica keys; differences only from float
+    reassociation across the different fusion shapes)."""
+    from repro.core.modes import propagate_mode1, propagate_mode2
+    from repro.core.controls import ctrl_for_assignment
+
+    engine = MDEngine()
+    cfg = RepExConfig(dimensions=(("temperature", 8),))
+    grid = build_grid(cfg)
+    state = engine.init_state(jax.random.key(0), 8)
+    ctrl = ctrl_for_assignment(grid, jnp.arange(8))
+    n_steps = jnp.full(8, 5, jnp.int32)
+    rng = jax.random.key(42)
+    out1 = propagate_mode1(engine, state, ctrl, n_steps, rng, max_steps=5)
+    out2 = propagate_mode2(engine, state, ctrl, n_steps, rng, n_waves=4,
+                           max_steps=5)
+    for k in ("pos", "vel"):
+        np.testing.assert_allclose(np.asarray(out1[k]), np.asarray(out2[k]),
+                                   atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# driver end-to-end (sync / async / engines / failures)
+# ---------------------------------------------------------------------------
+
+
+def _mini_md_driver(pattern, scheme="neighbor", failure_rate=0.0,
+                    execution_mode="auto", slots=None, dims=None):
+    engine = MDEngine()
+    cfg = RepExConfig(
+        dimensions=dims or (("temperature", 4),),
+        md_steps_per_cycle=4, n_cycles=4, pattern=pattern,
+        exchange_scheme=scheme, execution_mode=execution_mode)
+    return REMDDriver(engine, cfg, slots=slots, failure_rate=failure_rate)
+
+
+@pytest.mark.parametrize("pattern", ["synchronous", "asynchronous"])
+def test_driver_runs_both_patterns(pattern):
+    driver = _mini_md_driver(pattern)
+    ens = driver.init()
+    ens = driver.run(ens)
+    assert control_multiset_ok(ens)
+    assert int(ens.cycle) == 4
+
+
+def test_driver_multidim_round_robin():
+    driver = _mini_md_driver("synchronous",
+                             dims=(("temperature", 2), ("umbrella", 2)))
+    ens = driver.run(driver.init())
+    dims_visited = [h["dim"] for h in driver.history]
+    assert dims_visited == [0, 1, 0, 1]
+    assert control_multiset_ok(ens)
+
+
+def test_driver_failure_recovery():
+    driver = _mini_md_driver("synchronous", failure_rate=0.5)
+    ens = driver.run(driver.init())
+    assert control_multiset_ok(ens)
+    # with 50% corruption/cycle we must have seen and recovered failures
+    assert sum(h["failed"] for h in driver.history) > 0
+    # after recovery, no replica remains failed
+    assert not bool(jnp.any(driver.engine.is_failed(ens.state)))
+
+
+def test_driver_mode2_waves():
+    driver = _mini_md_driver("synchronous", execution_mode="mode2", slots=2)
+    assert driver.execution["mode"] == "mode2"
+    assert driver.execution["n_waves"] >= 2
+    ens = driver.run(driver.init())
+    assert control_multiset_ok(ens)
+
+
+def test_engine_swap_same_driver():
+    """The paper's NAMD swap: a different engine, zero driver changes."""
+    engine = LJEngine(n_particles=27)
+    cfg = RepExConfig(dimensions=(("temperature", 4),),
+                      md_steps_per_cycle=3, n_cycles=3)
+    driver = REMDDriver(engine, cfg)
+    ens = driver.run(driver.init())
+    assert control_multiset_ok(ens)
+    assert int(ens.cycle) == 3
+
+
+def test_elastic_restart_across_resource_change(tmp_path):
+    """The paper's elasticity claim: a simulation checkpointed under one
+    resource allocation restarts under a different one (the execution
+    mode / wave count re-derives from the NEW slot count; the ensemble
+    state is mesh/mode-independent)."""
+    from repro.ckpt import CheckpointManager
+    engine = MDEngine()
+    cfg = RepExConfig(dimensions=(("temperature", 8),),
+                      md_steps_per_cycle=4, n_cycles=2,
+                      execution_mode="auto")
+    d1 = REMDDriver(engine, cfg, slots=8,
+                    ckpt_dir=str(tmp_path), ckpt_every=1)
+    assert d1.execution == {"mode": "mode1", "n_waves": 1}
+    ens = d1.run(d1.init())
+
+    # "cluster shrank": restart the same simulation on 2 slots
+    d2 = REMDDriver(engine, cfg, slots=2,
+                    ckpt_dir=str(tmp_path), ckpt_every=1)
+    assert d2.execution["mode"] == "mode2"
+    assert d2.execution["n_waves"] == 4
+    restored = d2.restore(ens)
+    assert restored is not None
+    out = d2.run(restored, n_cycles=2)
+    assert control_multiset_ok(out)
+    assert int(out.cycle) == 4
+
+
+def test_checkpoint_restart_roundtrip(tmp_path):
+    driver = _mini_md_driver("synchronous")
+    driver.ckpt = __import__("repro.ckpt", fromlist=["CheckpointManager"]) \
+        .CheckpointManager(str(tmp_path), every=1)
+    ens = driver.run(driver.init(), n_cycles=2)
+    restored = driver.restore(ens)
+    assert restored is not None
+    np.testing.assert_array_equal(np.asarray(restored.assignment),
+                                  np.asarray(ens.assignment))
+    np.testing.assert_allclose(np.asarray(restored.state["pos"]),
+                               np.asarray(ens.state["pos"]), atol=1e-6)

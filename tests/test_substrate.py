@@ -1,0 +1,183 @@
+"""Substrate tests: optimizer, checkpointing, data pipeline, sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sharding as shd
+from repro.ckpt import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.config import TrainConfig, apply_overrides, ModelConfig
+from repro.data import SyntheticLMDataset
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         lr_schedule, sgld_noise)
+from repro.optim.compression import (ef_int8_compress_tree,
+                                     ef_int8_decompress_tree,
+                                     zero_error_tree)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = TrainConfig(learning_rate=0.1, warmup_steps=0, total_steps=200,
+                      weight_decay=0.0, grad_clip=100.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}          # d/dw (w^2)
+        params, state, _ = adamw_update(cfg, params, grads, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.15
+
+
+def test_lr_schedule_warmup_and_decay():
+    cfg = TrainConfig(learning_rate=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr_schedule(cfg, jnp.asarray(0))) == 0.0
+    assert float(lr_schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(lr_schedule(cfg, jnp.asarray(100))) == pytest.approx(
+        0.1, abs=1e-5)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-4)
+    assert float(norm) == pytest.approx(np.sqrt(1000.0), rel=1e-4)
+
+
+def test_sgld_noise_scales_with_temperature():
+    params = {"w": jnp.zeros((10000,))}
+    cold = sgld_noise(jax.random.key(0), params, 0.01, 0.0)
+    hot = sgld_noise(jax.random.key(0), params, 0.01, 10.0)
+    assert float(jnp.std(cold["w"])) == 0.0
+    assert float(jnp.std(hot["w"])) == pytest.approx(
+        np.sqrt(2 * 0.01 * 10.0), rel=0.05)
+
+
+def test_int8_error_feedback_roundtrip_unbiased():
+    """EF compression: accumulated dequantized updates converge to the true
+    sum (the error term carries the residual)."""
+    rng = np.random.default_rng(0)
+    true = jnp.asarray(rng.normal(size=(256,)) * 0.01)
+    err = zero_error_tree({"g": true})["g"]
+    total = jnp.zeros_like(true)
+    for _ in range(50):
+        q, scale, err = ({"g": None}, None, err)  # placeholder
+        qt, st, et = ef_int8_compress_tree({"g": true}, {"g": err})
+        deq = ef_int8_decompress_tree(qt, st)["g"]
+        total = total + deq
+        err = et["g"]
+    np.testing.assert_allclose(np.asarray(total / 50), np.asarray(true),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_exact(tmp_path):
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "nested": {"b": jnp.asarray([1, 2, 3], jnp.int32),
+                       "c": jnp.ones((2, 2), jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 7, tree, extra={"note": "x"})
+    restored, step, extra = load_checkpoint(str(tmp_path), tree)
+    assert step == 7 and extra == {"note": "x"}
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_atomicity_no_tmp_left(tmp_path):
+    tree = {"a": jnp.ones(4)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    entries = os.listdir(tmp_path)
+    assert not any(e.endswith(".tmp") for e in entries)
+    assert open(tmp_path / "latest").read().strip() == "step-00000002"
+
+
+def test_checkpoint_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, every=1)
+    tree = {"a": jnp.ones(4)}
+    for s in range(5):
+        mgr.maybe_save(s, tree)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step-"))
+    assert steps == ["step-00000003", "step-00000004"]
+    assert mgr.latest_step() == 4
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_learnable():
+    ds1 = SyntheticLMDataset(vocab_size=512, seq_len=32, global_batch=4,
+                             seed=3)
+    ds2 = SyntheticLMDataset(vocab_size=512, seq_len=32, global_batch=4,
+                             seed=3)
+    b1, b2 = ds1.next_batch(), ds2.next_batch()
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # bigram structure: successor sets are small (learnable)
+    succ, _ = ds1.succ, ds1.weights
+    assert succ.shape[1] == 32
+
+
+def test_data_host_sharding_disjoint():
+    full = SyntheticLMDataset(512, 16, 8, seed=1, host_id=0, n_hosts=1)
+    h0 = SyntheticLMDataset(512, 16, 8, seed=1, host_id=0, n_hosts=2)
+    h1 = SyntheticLMDataset(512, 16, 8, seed=1, host_id=1, n_hosts=2)
+    assert h0.host_batch == h1.host_batch == 4
+    b0, b1 = h0.next_batch(), h1.next_batch()
+    assert b0["tokens"].shape == (4, 16)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# sharding rules engine
+# ---------------------------------------------------------------------------
+
+
+def _mesh_16x16_stub():
+    """AxisEnv stand-in: use a real 1-device mesh but query spec_for logic
+    through a fake mesh-shape mapping via monkeypatched sizes."""
+    return None
+
+
+def test_spec_for_divisibility_and_priority():
+    # emulate the production mesh shape without 256 devices: use the
+    # abstract spec function with a mesh-like object
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    rules = shd.serve_rules(False)
+    # kv_heads divisible -> heads take model
+    spec = shd.spec_for(FakeMesh, rules,
+                        ("batch", "kv_seq", "kv_heads", "head_dim"),
+                        (128, 32768, 16, 128))
+    assert spec == jax.sharding.PartitionSpec("data", None, "model", None)
+    # kv_heads NOT divisible -> head_dim fallback
+    spec = shd.spec_for(FakeMesh, rules,
+                        ("batch", "kv_seq", "kv_heads", "head_dim"),
+                        (128, 32768, 8, 128))
+    assert spec == jax.sharding.PartitionSpec("data", None, None, "model")
+    # indivisible everything -> fully replicated
+    spec = shd.spec_for(FakeMesh, rules, ("vocab",), (51865,))
+    assert spec == jax.sharding.PartitionSpec(None)
+
+
+def test_train_rules_pure_dp_pick():
+    rules, batch_axes, model_axis = shd.pick_train_rules(40, False)
+    assert model_axis is None and batch_axes == ("data", "model")
+    rules, batch_axes, model_axis = shd.pick_train_rules(96, False)
+    assert model_axis == "model" and batch_axes == ("data",)
+
+
+def test_config_overrides():
+    cfg = ModelConfig()
+    cfg = apply_overrides(cfg, ["n_layers=7", "activation=gelu"])
+    assert cfg.n_layers == 7 and cfg.activation == "gelu"
