@@ -249,7 +249,85 @@ def xmat_exchange_scaling(rows: List[str]):
                     f"task_level_work_ratio={task_ratio:.0f}x")
 
 
+def cycle_fusion(rows: List[str]):
+    """Device-resident cycle fusion: scan K exchange cycles per dispatch.
+
+    Sweeps ``chunk_cycles in {1, 4, 16, 64}`` at ``md_steps_per_cycle=10``
+    and reports us/cycle plus the recovered per-cycle runtime overhead
+    T_data + T_RepEx_over + T_runtime_over: the gap between K=1 (full
+    overhead every cycle) and K=64 (overhead amortized 64x).  Two engines
+    bracket the regimes of Eq. (1):
+
+      harmonic — the overhead probe (T_MD ~ 0): cycle time IS the
+                 overhead, so fusion's full factor shows (the paper's
+                 scaling regime, where dispatch dominates short cycles);
+      md_chain — compute-heavy toy MD: T_MD dominates on CPU, fusion
+                 recovers only the overhead slice.
+
+    The legacy per-cycle ``run()`` is included as the unfused baseline.
+    Results are also emitted to ``BENCH_cycle_fusion.json``.
+    ``CYCLE_FUSION_SMOKE=1`` shrinks the sweep for CI smoke runs.
+    """
+    import json
+    import os
+
+    from repro.md import HarmonicEngine
+
+    smoke = bool(os.environ.get("CYCLE_FUSION_SMOKE"))
+    n_replicas = 8
+    n_cycles = 16 if smoke else 256
+    chunks = (1, 4) if smoke else (1, 4, 16, 64)
+    cfg = RepExConfig(dimensions=(("temperature", n_replicas),),
+                      md_steps_per_cycle=MD_STEPS, n_cycles=n_cycles)
+
+    def us_per_cycle(run_once):
+        run_once()                       # warm: compile every variant
+        best = float("inf")
+        for _ in range(3):               # min-of-3: steady state, not noise
+            t0 = time.perf_counter()
+            run_once()
+            best = min(best, time.perf_counter() - t0)
+        return best / n_cycles * 1e6
+
+    engines = {"harmonic": HarmonicEngine}
+    if not smoke:
+        engines["md_chain"] = MDEngine
+    payload: Dict[str, Dict] = {"md_steps_per_cycle": MD_STEPS,
+                                "n_replicas": n_replicas,
+                                "n_cycles": n_cycles, "engines": {}}
+    for name, make_engine in engines.items():
+        eng = make_engine()
+        drv = REMDDriver(eng, cfg)
+        ens = drv.init()
+        t_unfused = us_per_cycle(lambda: drv.run(ens, n_cycles=n_cycles))
+        rows.append(f"cycle_fusion_{name}_unfused,{t_unfused:.0f},"
+                    f"per_cycle_run()")
+
+        per_k: Dict[int, float] = {}
+        for k in chunks:
+            d = REMDDriver(eng, cfg)
+            e = d.init()
+            per_k[k] = us_per_cycle(
+                lambda: d.run_fused(e, n_cycles=n_cycles, chunk_cycles=k))
+        k_max = max(chunks)
+        recovered = per_k[chunks[0]] - per_k[k_max]
+        for k in chunks:
+            rows.append(f"cycle_fusion_{name}_K{k},{per_k[k]:.0f},"
+                        f"speedup_vs_K1={per_k[chunks[0]] / per_k[k]:.2f}x")
+        rows.append(f"cycle_fusion_{name}_recovered_overhead,"
+                    f"{recovered:.0f},"
+                    f"us_per_cycle_of_Eq1_overhead_amortized_at_K{k_max}")
+        payload["engines"][name] = {
+            "unfused_us_per_cycle": t_unfused,
+            "fused_us_per_cycle": {str(k): per_k[k] for k in chunks},
+            "speedup_K_max_vs_K1": per_k[chunks[0]] / per_k[k_max],
+            "recovered_runtime_overhead_us_per_cycle": recovered,
+        }
+    with open("BENCH_cycle_fusion.json", "w") as f:
+        json.dump(payload, f, indent=2)
+
+
 ALL = [fig5_overheads, fig6_1d_weak_scaling, fig7_parallel_efficiency,
        fig8_engine_swap, fig9_mremd_weak, fig10_mremd_strong,
        fig12_multicore_replicas, fig13_async_utilization,
-       table1_capabilities, xmat_exchange_scaling]
+       table1_capabilities, xmat_exchange_scaling, cycle_fusion]

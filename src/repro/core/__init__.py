@@ -5,11 +5,13 @@ control grids (T/U/S, arbitrary order), Metropolis exchange (neighbor DEO /
 full-matrix Gibbs), replica-level fault tolerance, and the REMDDriver that
 orchestrates them over any SimulationEngine.
 """
-from repro.core.controls import ControlGrid, build_grid, ctrl_for_assignment
+from repro.core.controls import (ControlGrid, PairTable, build_grid,
+                                 ctrl_for_assignment)
 from repro.core.engine import SimulationEngine
 from repro.core.ensemble import Ensemble, control_multiset_ok, make_ensemble
 from repro.core.exchange import (matrix_exchange, metropolis,
-                                 neighbor_exchange)
+                                 neighbor_exchange, pair_energies)
+from repro.core.failures import detect_recover
 from repro.core.modes import auto_mode, propagate_mode1, propagate_mode2
-from repro.core.patterns import async_cycle, sync_cycle
+from repro.core.patterns import async_cycle, fused_cycle, sync_cycle
 from repro.core.repex import REMDDriver

@@ -13,8 +13,9 @@ corresponds to the multi-index of r in the row-major grid.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +24,25 @@ import numpy as np
 from repro.config import RepExConfig
 
 KB = 0.0019872041   # kcal/mol/K  (Boltzmann, Amber units)
+
+
+class PairTable(NamedTuple):
+    """Stacked neighbor-pair tables for ALL (dim, parity) sweeps.
+
+    Host numpy arrays of shape (n_dims, 2, max_pairs) — cached once per
+    grid and embedded as constants wherever they are traced (caching
+    device arrays would leak tracers if first touched inside a jit).
+    Rows shorter than ``max_pairs`` are padded with self-pairs
+    (left == right == 0) carrying ``valid == False``; the exchange masks
+    them and routes their scatter writes out of bounds (dropped).
+    Because the tables are stacked, ``dim_index``/``parity`` can be
+    *traced* values (derived from ``ens.cycle`` inside a scan) — the
+    device-resident analogue of host-side ``neighbor_pairs``.
+    """
+    left: np.ndarray    # (n_dims, 2, max_pairs) int32
+    right: np.ndarray   # (n_dims, 2, max_pairs) int32
+    valid: np.ndarray   # (n_dims, 2, max_pairs) bool
+    count: np.ndarray   # (n_dims, 2) f32: real (un-padded) pairs per sweep
 
 
 @dataclass(frozen=True)
@@ -57,6 +77,27 @@ class ControlGrid:
         left = np.take(idx, starts, axis=ax).reshape(-1)
         right = np.take(idx, starts + 1, axis=ax).reshape(-1)
         return left, right
+
+    @functools.cached_property
+    def pair_table(self) -> PairTable:
+        """All neighbor-pair sweeps as one stacked, padded device table."""
+        n_dims = len(self.dims)
+        sweeps = [[self.neighbor_pairs(d, p) for p in (0, 1)]
+                  for d in range(n_dims)]
+        max_pairs = max((len(l) for row in sweeps for l, _ in row),
+                        default=0)
+        max_pairs = max(max_pairs, 1)
+        left = np.zeros((n_dims, 2, max_pairs), np.int32)
+        right = np.zeros((n_dims, 2, max_pairs), np.int32)
+        valid = np.zeros((n_dims, 2, max_pairs), bool)
+        for d in range(n_dims):
+            for p in (0, 1):
+                l, r = sweeps[d][p]
+                left[d, p, :len(l)] = l
+                right[d, p, :len(r)] = r
+                valid[d, p, :len(l)] = True
+        return PairTable(left=left, right=right, valid=valid,
+                         count=valid.sum(-1).astype(np.float32))
 
 
 def build_grid(cfg: RepExConfig) -> ControlGrid:
@@ -111,8 +152,17 @@ def build_grid(cfg: RepExConfig) -> ControlGrid:
     return ControlGrid(dims=tuple(dims), values=values, shape=shape)
 
 
-def ctrl_for_assignment(grid: ControlGrid, assignment: jax.Array
+def ctrl_for_assignment(grid: ControlGrid, assignment: jax.Array,
+                        keys: Sequence[str] = None
                         ) -> Dict[str, jax.Array]:
-    """Gather each replica's current control parameters: (R, ...)."""
-    return {k: jnp.take(v, assignment, axis=0)
-            for k, v in grid.values.items()}
+    """Gather each replica's current control parameters: (R, ...).
+
+    ``keys`` restricts the gather to the ctrl fields an engine actually
+    consumes (``engine.ctrl_keys``) — for light engines most of the grid
+    is dead weight, and each skipped field is one less gather per cycle
+    in the fused hot loop.
+    """
+    values = grid.values
+    if keys is not None:
+        values = {k: values[k] for k in keys}
+    return {k: jnp.take(v, assignment, axis=0) for k, v in values.items()}

@@ -50,3 +50,17 @@ class SimulationEngine(Protocol):
     def is_failed(self, state: StateStack) -> jax.Array:
         """(R,) bool — replica-level failure detection (NaN/divergence)."""
         ...
+
+
+# Optional engine extension (duck-typed, NOT part of the Protocol so that
+# minimal engines stay minimal):
+#
+#   def energy_pair(self, state, ctrl_a: Ctrl, ctrl_b: Ctrl)
+#           -> tuple[jax.Array, jax.Array]
+#
+# The exchange phase evaluates the ensemble under its current AND its
+# proposed ctrl assignment.  Engines whose energy factors into
+# ctrl-independent features (the expensive O(N^2) part) times a cheap
+# ctrl reduction should implement ``energy_pair`` to compute the features
+# once; ``repro.core.exchange.pair_energies`` dispatches to it when
+# present and falls back to two ``energy`` calls otherwise.

@@ -22,7 +22,6 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.controls import ControlGrid, ctrl_for_assignment
 
@@ -38,37 +37,65 @@ def metropolis(delta: jax.Array, rng: jax.Array) -> jax.Array:
     return u < jnp.exp(jnp.minimum(-delta, 0.0))
 
 
+def pair_energies(engine, state, ctrl_self: Dict, ctrl_swap: Dict
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Reduced energies under the current and the swapped ctrl assignment.
+
+    Engines exposing ``energy_pair`` evaluate both assignments from ONE
+    feature pass (the O(N^2) pair sums are ctrl-independent); others fall
+    back to two full ``energy`` calls.
+    """
+    if hasattr(engine, "energy_pair"):
+        return engine.energy_pair(state, ctrl_self, ctrl_swap)
+    return (engine.energy(state, ctrl_self),
+            engine.energy(state, ctrl_swap))
+
+
 def neighbor_exchange(
     engine,
     state,
     grid: ControlGrid,
     assignment: jax.Array,
-    dim_index: int,
-    parity: int,
+    dim_index,
+    parity,
     rng: jax.Array,
     ready: jax.Array = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One DEO exchange sweep along one grid dimension.
+
+    ``dim_index``/``parity`` may be host ints OR traced scalars (the fused
+    multi-cycle path derives them from ``ens.cycle`` on device): the sweep's
+    pairs are gathered from the grid's stacked :class:`PairTable`, padded to
+    a fixed width so one compiled program serves every sweep.  Padding
+    pairs are self-pairs with ``valid == False`` — auto-rejected, and their
+    scatter writes are no-ops.
 
     ``ready`` masks replicas eligible to exchange (asynchronous pattern:
     lagging replicas sit out — their pairs are auto-rejected, which is
     exactly how async RE degrades gracefully instead of barriering).
     Returns (new_assignment, stats).
     """
-    left_np, right_np = grid.neighbor_pairs(dim_index, parity)
-    left = jnp.asarray(left_np)
-    right = jnp.asarray(right_np)
+    tab = grid.pair_table
+    left = jnp.asarray(tab.left)[dim_index, parity]
+    right = jnp.asarray(tab.right)[dim_index, parity]
+    valid = jnp.asarray(tab.valid)[dim_index, parity]
     inv = inverse_permutation(assignment)
-    ri = inv[left]          # replicas holding the left ctrls
-    rj = inv[right]
+    n = assignment.shape[0]
+    # padding pairs scatter to index n: dropped, so they can never race a
+    # real pair's write (ctrl 0 appears in both real and padding slots)
+    ri = jnp.where(valid, inv[left], n)     # replicas holding the left ctrls
+    rj = jnp.where(valid, inv[right], n)
 
-    # current and swapped reduced energies
-    u_self = engine.energy(state, ctrl_for_assignment(grid, assignment))
-    swapped = assignment.at[ri].set(right).at[rj].set(left)
-    u_swap = engine.energy(state, ctrl_for_assignment(grid, swapped))
+    # current and swapped reduced energies (one feature pass for both)
+    swapped = (assignment.at[ri].set(right, mode="drop")
+               .at[rj].set(left, mode="drop"))
+    ctrl_keys = getattr(engine, "ctrl_keys", None)
+    u_self, u_swap = pair_energies(
+        engine, state, ctrl_for_assignment(grid, assignment, ctrl_keys),
+        ctrl_for_assignment(grid, swapped, ctrl_keys))
 
     delta = (u_swap[ri] + u_swap[rj]) - (u_self[ri] + u_self[rj])
-    accept = metropolis(delta, rng)
+    accept = metropolis(delta, rng) & valid
     if ready is not None:
         accept = accept & ready[ri] & ready[rj]
     fail = engine.is_failed(state)
@@ -76,11 +103,14 @@ def neighbor_exchange(
 
     new_left = jnp.where(accept, right, left)
     new_right = jnp.where(accept, left, right)
-    new_assignment = assignment.at[ri].set(new_left).at[rj].set(new_right)
+    new_assignment = (assignment.at[ri].set(new_left, mode="drop")
+                      .at[rj].set(new_right, mode="drop"))
+    n_valid = jnp.asarray(tab.count)[dim_index, parity]
     stats = {
-        "attempted": jnp.asarray(left.shape[0], jnp.float32),
+        "attempted": n_valid,
         "accepted": jnp.sum(accept.astype(jnp.float32)),
-        "mean_delta": jnp.mean(delta),
+        "mean_delta": (jnp.sum(jnp.where(valid, delta, 0.0))
+                       / jnp.maximum(n_valid, 1.0)),
     }
     return new_assignment, stats
 

@@ -64,3 +64,22 @@ def recover(engine, ens: Ensemble, failed: jax.Array, policy: str,
     state = jax.tree.map(mend, ens.state, backup_state)
     return ens._replace(state=state,
                         failures=ens.failures + n_failed), n_failed
+
+
+def detect_recover(engine, ens: Ensemble, policy: str, backup_state: Any
+                   ) -> Tuple[Ensemble, Any, jax.Array]:
+    """Fully device-side detect + recover + backup-carry (scan-body safe).
+
+    Replicates the driver's host logic with zero host round-trips:
+    ``recover`` applied to an all-False failure mask is the identity, so it
+    runs unconditionally; the backup advances to the post-cycle state only
+    on clean cycles (any failure freezes it, exactly like the host path).
+    Returns (ensemble, new_backup_state, n_failed).
+    """
+    failed = detect(engine, ens)
+    any_failed = jnp.any(failed)
+    new_ens, n_failed = recover(engine, ens, failed, policy, backup_state)
+    new_backup = jax.tree.map(
+        lambda b, s: jnp.where(any_failed, b, s), backup_state,
+        new_ens.state)
+    return new_ens, new_backup, n_failed

@@ -14,10 +14,15 @@ un-ready replica keeps simulating.  A straggler therefore delays only its
 ladder neighbours, never the ensemble — the paper's async claim, preserved
 under SPMD.
 
-``dim_index`` / ``parity`` are HOST-static per cycle (the driver schedules
-dimensions round-robin, exactly like the paper's M-REMD: "simulations are
-performed only in one dimension at any given instant of time").  Each
-(dim, parity) pair is its own compiled cycle — 2 x n_dims small variants.
+``dim_index`` / ``parity`` come in two flavours:
+
+  * legacy per-cycle path (``sync_cycle`` / ``async_cycle``): HOST-static —
+    the driver schedules dimensions round-robin (the paper's M-REMD:
+    "simulations are performed only in one dimension at any given instant
+    of time") and each (dim, parity) pair is its own compiled cycle.
+  * fused path (``fused_cycle``): TRACED — derived from ``ens.cycle`` on
+    device via a gather into the grid's stacked pair table, so a single
+    compiled ``lax.scan`` can run K full cycles with zero host round-trips.
 """
 from __future__ import annotations
 
@@ -34,7 +39,8 @@ from repro.core.exchange import matrix_exchange, neighbor_exchange
 
 def _propagate(engine, ens: Ensemble, grid: ControlGrid, n_steps, rng,
                execution: Dict[str, Any], max_steps: int, mesh=None):
-    ctrl = ctrl_for_assignment(grid, ens.assignment)
+    ctrl = ctrl_for_assignment(grid, ens.assignment,
+                               getattr(engine, "ctrl_keys", None))
     if execution["mode"] == "mode2":
         return M.propagate_mode2(engine, ens.state, ctrl, n_steps, rng,
                                  execution["n_waves"], mesh,
@@ -51,6 +57,48 @@ def _exchange(engine, state, grid, assignment, dim_index: int, parity: int,
                              parity, rng, ready=ready)
 
 
+def _cycle_core(engine, grid: ControlGrid, ens: Ensemble, *, pattern: str,
+                md_steps: int, window_steps: int, dim_index, parity,
+                scheme: str, execution, mesh
+                ) -> Tuple[Ensemble, Dict[str, Any], jax.Array]:
+    """The ONE cycle body shared by every entry point.
+
+    ``dim_index``/``parity`` may be host ints (legacy per-cycle jits) or
+    traced scalars (fused scan) — the exchange gathers its sweep from the
+    stacked :class:`PairTable` either way, so legacy and fused execution
+    are the same trace by construction, not by manual lockstep.
+    Returns (new_ens, exchange_stats, ready_mask).
+    """
+    k_md, k_ex, k_next = jax.random.split(ens.rng, 3)
+
+    if pattern == "asynchronous":
+        max_steps = 2 * window_steps
+        n_steps = jnp.clip(
+            jnp.round(window_steps * ens.speed).astype(jnp.int32),
+            1, max_steps)
+        state = _propagate(engine, ens, grid, n_steps, k_md, execution,
+                           max_steps, mesh)
+        debt = ens.debt + n_steps.astype(jnp.float32)
+        ready = (debt >= md_steps) & ens.alive
+        assignment, stats = _exchange(engine, state, grid, ens.assignment,
+                                      dim_index, parity, k_ex, scheme,
+                                      ready=ready)
+        debt = jnp.where(ready, debt - md_steps, debt)
+        new_ens = ens._replace(state=state, assignment=assignment,
+                               rng=k_next, cycle=ens.cycle + 1, debt=debt)
+    else:
+        n_steps = jnp.full(ens.assignment.shape, md_steps, jnp.int32)
+        state = _propagate(engine, ens, grid, n_steps, k_md, execution,
+                           md_steps, mesh)
+        ready = ens.alive
+        assignment, stats = _exchange(engine, state, grid, ens.assignment,
+                                      dim_index, parity, k_ex, scheme,
+                                      ready=ready)
+        new_ens = ens._replace(state=state, assignment=assignment,
+                               rng=k_next, cycle=ens.cycle + 1)
+    return new_ens, stats, ready
+
+
 def sync_cycle(engine, grid: ControlGrid, ens: Ensemble, md_steps: int,
                dim_index: int, parity: int, scheme: str = "neighbor",
                execution=None, mesh=None
@@ -58,17 +106,10 @@ def sync_cycle(engine, grid: ControlGrid, ens: Ensemble, md_steps: int,
     """One synchronous cycle: propagate-all barrier, then one exchange sweep
     along the scheduled dimension (DEO parity)."""
     execution = execution or {"mode": "mode1", "n_waves": 1}
-    k_md, k_ex, k_next = jax.random.split(ens.rng, 3)
-
-    n_steps = jnp.full(ens.assignment.shape, md_steps, jnp.int32)
-    state = _propagate(engine, ens, grid, n_steps, k_md, execution,
-                       md_steps, mesh)
-
-    assignment, stats = _exchange(engine, state, grid, ens.assignment,
-                                  dim_index, parity, k_ex, scheme,
-                                  ready=ens.alive)
-    new_ens = ens._replace(state=state, assignment=assignment, rng=k_next,
-                           cycle=ens.cycle + 1)
+    new_ens, stats, _ = _cycle_core(
+        engine, grid, ens, pattern="synchronous", md_steps=md_steps,
+        window_steps=0, dim_index=dim_index, parity=parity, scheme=scheme,
+        execution=execution, mesh=mesh)
     return new_ens, {f"dim{dim_index}": stats}
 
 
@@ -82,23 +123,48 @@ def async_cycle(engine, grid: ControlGrid, ens: Ensemble, md_steps: int,
     reaches ``md_steps`` become ready, exchange, and bank the remainder.
     """
     execution = execution or {"mode": "mode1", "n_waves": 1}
-    k_md, k_ex, k_next = jax.random.split(ens.rng, 3)
-
-    max_steps = 2 * window_steps
-    n_steps = jnp.clip(
-        jnp.round(window_steps * ens.speed).astype(jnp.int32), 1, max_steps)
-    state = _propagate(engine, ens, grid, n_steps, k_md, execution,
-                       max_steps, mesh)
-    debt = ens.debt + n_steps.astype(jnp.float32)
-    ready = (debt >= md_steps) & ens.alive
-
-    assignment, stats = _exchange(engine, state, grid, ens.assignment,
-                                  dim_index, parity, k_ex, scheme,
-                                  ready=ready)
-    debt = jnp.where(ready, debt - md_steps, debt)
+    new_ens, stats, ready = _cycle_core(
+        engine, grid, ens, pattern="asynchronous", md_steps=md_steps,
+        window_steps=window_steps, dim_index=dim_index, parity=parity,
+        scheme=scheme, execution=execution, mesh=mesh)
     out_stats: Dict[str, Any] = {f"dim{dim_index}": stats,
                                  "ready_frac": jnp.mean(
                                      ready.astype(jnp.float32))}
-    new_ens = ens._replace(state=state, assignment=assignment, rng=k_next,
-                           cycle=ens.cycle + 1, debt=debt)
     return new_ens, out_stats
+
+
+def fused_cycle(engine, grid: ControlGrid, ens: Ensemble, *,
+                pattern: str, md_steps: int, window_steps: int,
+                scheme: str = "neighbor", execution=None, mesh=None
+                ) -> Tuple[Ensemble, Dict[str, jax.Array]]:
+    """One cycle with dim/parity derived ON DEVICE from ``ens.cycle``.
+
+    The same ``_cycle_core`` as ``sync_cycle``/``async_cycle`` — same rng
+    splits, same propagate, same exchange draw shapes — but with the sweep
+    selected by a gather into the stacked :class:`PairTable` instead of
+    host-static closure args.  That makes the whole cycle a legal
+    ``lax.scan`` body: K cycles compile to ONE program with zero host
+    round-trips inside the chunk.
+
+    Returns (new_ens, stats) where stats is a FLAT dict of fixed-shape
+    scalars (``dim``, ``accepted``, ``attempted``, ``ready_frac``)
+    suitable for stacking into the scan's per-cycle ys.  ``mean_delta``
+    is deliberately NOT carried: nothing downstream reads it per-cycle,
+    and dropping it lets XLA dead-code-eliminate its reduction from the
+    scan body (the fused hot loop is op-count-bound on CPU).
+    """
+    execution = execution or {"mode": "mode1", "n_waves": 1}
+    n_dims = len(grid.dims)
+    dim_index = jnp.mod(ens.cycle, n_dims)
+    parity = jnp.mod(ens.cycle // n_dims, 2)
+    new_ens, stats, ready = _cycle_core(
+        engine, grid, ens, pattern=pattern, md_steps=md_steps,
+        window_steps=window_steps, dim_index=dim_index, parity=parity,
+        scheme=scheme, execution=execution, mesh=mesh)
+    flat = {
+        "dim": dim_index.astype(jnp.int32),
+        "accepted": stats["accepted"],
+        "attempted": stats["attempted"],
+        "ready_frac": jnp.mean(ready.astype(jnp.float32)),
+    }
+    return new_ens, flat

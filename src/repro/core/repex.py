@@ -12,9 +12,31 @@ cycles.  Per-cycle wall time is decomposed exactly as the paper's Eq. (1):
   T_runtime_over — dispatch/launch overhead of the compiled step (the
                    RADICAL-Pilot analogue in our stack is the XLA dispatch)
 
+Two execution paths pay these terms very differently:
+
+``run()``        — one dispatch per cycle, with 4+ host<->device syncs
+                   (cycle fetch for scheduling, block on the step, failure
+                   fetch, stats fetch).  Every cycle pays the FULL
+                   T_data + T_RepEx_over + T_runtime_over.
+
+``run_fused()``  — a single jitted ``lax.scan`` runs ``chunk_cycles = K``
+                   complete propagate -> exchange -> detect -> recover
+                   cycles per dispatch with zero host round-trips inside
+                   the chunk.  Sweep scheduling becomes a device gather
+                   (stacked pair tables), failure recovery carries the
+                   backup state in the scan carry, and per-cycle stats
+                   accumulate into (K,)-shaped device arrays fetched ONCE
+                   per chunk.  T_MD and T_EX are unchanged, while
+                   T_data, T_RepEx_over and T_runtime_over are amortized
+                   by 1/K — the overhead terms Eq. (1) blames for poor
+                   scaling shrink toward zero as K grows, which is what
+                   lets short-cycle workloads (md_steps_per_cycle <= 10)
+                   run at hardware speed.  Trajectories are bit-identical
+                   to ``run()`` for the same seed.
+
 The driver supports both patterns, both execution modes, failure
 injection/recovery, and periodic ensemble checkpointing (restart-able,
-mesh-independent).
+mesh-independent; the fused path checkpoints at chunk boundaries).
 """
 from __future__ import annotations
 
@@ -24,14 +46,12 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import RepExConfig
 from repro.core import failures as F
 from repro.core import patterns
 from repro.core.controls import ControlGrid, build_grid
 from repro.core.ensemble import Ensemble, make_ensemble
-from repro.core.exchange import (matrix_exchange, neighbor_exchange)
 from repro.core.modes import auto_mode
 from repro.ckpt import CheckpointManager
 
@@ -104,7 +124,10 @@ class REMDDriver:
             verbose: bool = False) -> Ensemble:
         n_cycles = n_cycles or self.cfg.n_cycles
         n_dims = len(self.grid.dims)
-        backup = jax.tree.map(jnp.copy, ens.state)
+        # Backup carry for relaunch recovery: a reference is enough — JAX
+        # arrays are immutable, so the snapshot can never be mutated out
+        # from under us.  The carry only advances on clean cycles.
+        backup = ens.state
         fail_key = jax.random.key(self.cfg.seed + 999)
 
         for c in range(n_cycles):
@@ -161,6 +184,109 @@ class REMDDriver:
                 acc = (s["accepted"] / max(s["attempted"], 1)) * 100
                 print(f"cycle {cyc:4d} dim {dim_index} "
                       f"acc {acc:5.1f}%  t {t_step*1e3:7.1f} ms")
+        return ens
+
+    # -- fused multi-cycle path -------------------------------------------
+
+    def _fused_chunk_fn(self, chunk_cycles: int):
+        """Jitted scan over ``chunk_cycles`` complete cycles (cached)."""
+        key = ("fused", chunk_cycles, self.failure_rate)
+        if key in self._compiled:
+            return self._compiled[key]
+        cfg = self.cfg
+        policy = "relaunch" if cfg.relaunch_failed else "continue"
+        inject = self.failure_rate > 0
+        window_steps = max(int(cfg.md_steps_per_cycle * cfg.async_window), 1)
+
+        def one_cycle(carry, _):
+            ens, backup, fail_key = carry
+            if inject:
+                fail_key, k = jax.random.split(fail_key)
+                ens = F.inject_failures(ens, k, self.failure_rate)
+            cyc = ens.cycle
+            new_ens, stats = patterns.fused_cycle(
+                self.engine, self.grid, ens, pattern=cfg.pattern,
+                md_steps=cfg.md_steps_per_cycle,
+                window_steps=window_steps, scheme=cfg.exchange_scheme,
+                execution=self.execution, mesh=self.mesh)
+            new_ens, backup, n_failed = F.detect_recover(
+                self.engine, new_ens, policy, backup)
+            ys = dict(stats, cycle=cyc, failed=n_failed)
+            return (new_ens, backup, fail_key), ys
+
+        def chunk(ens, backup, fail_key):
+            (ens, backup, fail_key), ys = jax.lax.scan(
+                one_cycle, (ens, backup, fail_key), xs=None,
+                length=chunk_cycles)
+            return ens, backup, fail_key, ys
+
+        jitted = jax.jit(chunk)
+        self._compiled[key] = jitted
+        return jitted
+
+    def run_fused(self, ens: Ensemble, n_cycles: Optional[int] = None,
+                  chunk_cycles: int = 16, verbose: bool = False) -> Ensemble:
+        """``run()`` with K cycles fused per dispatch (see module docstring).
+
+        Semantically identical to ``run()`` — same trajectories, same
+        ``history``/``acceptance`` bookkeeping — but the per-cycle overhead
+        terms of Eq. (1) are paid once per chunk instead of once per cycle.
+        Checkpointing happens at chunk boundaries (a chunk that crosses the
+        cadence saves its final state).
+        """
+        if chunk_cycles < 1:
+            raise ValueError(f"chunk_cycles must be >= 1, got {chunk_cycles}")
+        n_cycles = n_cycles or self.cfg.n_cycles
+        backup = ens.state
+        fail_key = jax.random.key(self.cfg.seed + 999)
+        c0 = int(jax.device_get(ens.cycle))
+        done = 0
+        while done < n_cycles:
+            k = min(chunk_cycles, n_cycles - done)
+            step = self._fused_chunk_fn(k)
+            t0 = time.perf_counter()
+            ens, backup, fail_key, ys = step(ens, backup, fail_key)
+            jax.block_until_ready(ens.assignment)
+            t_chunk = time.perf_counter() - t0      # K x (T_MD + T_EX)
+
+            t1 = time.perf_counter()
+            ys = jax.device_get(ys)                 # ONE fetch per chunk
+            t_data = time.perf_counter() - t1
+
+            # batch-convert the (K,) stat arrays once; per-cycle history
+            # entries are then plain python — the bookkeeping stays O(K)
+            # cheap instead of K x numpy-scalar boxing
+            dims = ys["dim"].tolist()
+            acc = ys["accepted"].tolist()
+            att = ys["attempted"].tolist()
+            cycles = ys["cycle"].tolist()
+            failed = ys["failed"].tolist()
+            rfrac = ys["ready_frac"].tolist()
+            t_step, t_d = t_chunk / k, t_data / k
+            for i in range(k):
+                dkey = f"dim{dims[i]}"
+                bucket = self.acceptance[dkey]
+                bucket[0] += acc[i]
+                bucket[1] += att[i]
+                self.history.append({
+                    "cycle": cycles[i], "dim": dims[i],
+                    "t_step": t_step, "t_prep": 0.0,
+                    "t_recover": 0.0, "t_data": t_d,
+                    "accept": acc[i], "attempt": att[i],
+                    "failed": failed[i], "ready_frac": rfrac[i],
+                })
+            done += k
+
+            if self.ckpt is not None and self.ckpt.every > 0:
+                lo, hi = c0 + done - k, c0 + done - 1
+                if hi // self.ckpt.every > (lo - 1) // self.ckpt.every:
+                    self.ckpt.maybe_save(hi, ens._asdict(), force=True)
+            if verbose:
+                acc = sum(float(a) for a in ys["accepted"])
+                att = max(sum(float(a) for a in ys["attempted"]), 1.0)
+                print(f"chunk @cycle {c0 + done:4d} K={k} "
+                      f"acc {acc / att * 100:5.1f}%  "
+                      f"t {t_chunk / k * 1e3:7.2f} ms/cycle")
         return ens
 
     def acceptance_ratios(self) -> Dict[str, float]:

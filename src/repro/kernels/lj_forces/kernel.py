@@ -57,7 +57,7 @@ def _energy_kernel(ci_ref, cj_ref, o_ref, *, sigma, eps, box, bi, bj):
     o_ref[0, 0] += 0.5 * jnp.sum(e)
 
 
-def _forces_kernel(ci_ref, cj_ref, o_ref, *, sigma, eps, box, bi, bj, n_j):
+def _forces_kernel(ci_ref, cj_ref, o_ref, *, sigma, eps, box, bi, bj):
     ii = pl.program_id(0)
     jj = pl.program_id(1)
 
@@ -104,7 +104,7 @@ def lj_forces_kernel(coords, *, sigma: float, eps: float, box: float,
     assert n % block == 0
     nb = n // block
     kern = functools.partial(_forces_kernel, sigma=sigma, eps=eps, box=box,
-                             bi=block, bj=block, n_j=nb)
+                             bi=block, bj=block)
     return pl.pallas_call(
         kern,
         grid=(nb, nb),

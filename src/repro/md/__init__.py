@@ -1,2 +1,2 @@
 from repro.md.system import MolecularSystem, chain_molecule
-from repro.md.engine import LJEngine, MDEngine
+from repro.md.engine import HarmonicEngine, LJEngine, MDEngine

@@ -1,15 +1,22 @@
 """MD engines implementing the SimulationEngine protocol.
 
-``MDEngine``  — the 'Amber' stand-in: toy chain molecules, BAOAB Langevin,
-                umbrella + salt control support (full T/U/S exchange).
-``LJEngine``  — the 'second engine' (the paper's NAMD swap): a Lennard-Jones
-                fluid with temperature exchange; its force loop is the
-                Pallas ``lj_forces`` kernel hot spot (jnp oracle fallback
-                on CPU).
+``MDEngine``       — the 'Amber' stand-in: toy chain molecules, BAOAB
+                     Langevin, umbrella + salt control support (full T/U/S
+                     exchange).
+``LJEngine``       — the 'second engine' (the paper's NAMD swap): a
+                     Lennard-Jones fluid with temperature exchange; its
+                     force loop is the Pallas ``lj_forces`` kernel hot spot
+                     (jnp oracle fallback on CPU).
+``HarmonicEngine`` — the overhead probe: an exactly-integrable
+                     Ornstein-Uhlenbeck process whose whole MD phase
+                     compiles to ~a dozen ops, so cycle wall time is
+                     almost purely the runtime-overhead terms of the
+                     paper's Eq. (1) — the regime its scaling analysis
+                     (and our cycle-fusion benchmark) targets.
 
-Both engines vmap over the replica axis and run a masked ``fori_loop`` over
-``max_steps`` so per-replica step counts (async pattern) compile to one
-program.
+MDEngine/LJEngine vmap over the replica axis and run a masked ``fori_loop``
+over ``max_steps`` so per-replica step counts (async pattern) compile to
+one program; HarmonicEngine closes the step loop analytically.
 """
 from __future__ import annotations
 
@@ -23,6 +30,14 @@ from jax import lax
 from repro.md import energy as E
 from repro.md import integrators as I
 from repro.md.system import MolecularSystem, chain_molecule, initial_positions
+
+
+def _any_nonfinite(state) -> jax.Array:
+    """(R,) bool: replica-level NaN/inf scan — shared failure detector."""
+    bad = jax.tree.map(
+        lambda x: jnp.any(~jnp.isfinite(x), axis=tuple(range(1, x.ndim))),
+        state)
+    return functools.reduce(jnp.logical_or, jax.tree.leaves(bad))
 
 
 class MDEngine:
@@ -91,6 +106,16 @@ class MDEngine:
         f = jax.vmap(lambda p: E.features(p, sys))(state["pos"])
         return f
 
+    def energy_pair(self, state, ctrl_a, ctrl_b):
+        """u(x; ctrl_a), u(x; ctrl_b) from ONE feature pass.
+
+        The O(N^2) pair sums in ``features`` are ctrl-independent, so the
+        exchange phase's self/swap evaluation needs them only once; each
+        ctrl assignment is then an O(1) reduction over the features."""
+        f = self.replica_features(state)
+        red = jax.vmap(E.reduced_energy_from_features)
+        return red(f, ctrl_a), red(f, ctrl_b)
+
     def cross_energy(self, state, ctrl_grid):
         """(R, C) matrix u_c(x_i) via the feature decomposition.
 
@@ -101,15 +126,90 @@ class MDEngine:
         return xops.exchange_matrix(f, ctrl_grid)
 
     def is_failed(self, state):
-        bad = jax.tree.map(
-            lambda x: jnp.any(~jnp.isfinite(x), axis=tuple(
-                range(1, x.ndim))), state)
-        return functools.reduce(jnp.logical_or, jax.tree.leaves(bad))
+        return _any_nonfinite(state)
+
+
+class HarmonicEngine:
+    """Replicas in a 3-D harmonic well, propagated by the EXACT
+    Ornstein-Uhlenbeck solution of overdamped Langevin dynamics:
+
+        x_{t+1} = a x_t + sigma(T) xi_t,   a = exp(-gamma dt),
+        sigma(T)^2 = (kB T / k_spring) (1 - a^2)
+
+    ``n`` masked steps fold into one closed-form update (prefix products
+    over the per-step decay + accumulated noise), so ``propagate``
+    compiles to ~a dozen ops regardless of step count.  That makes this
+    the overhead-characterization engine: with T_MD ~ 0, cycle wall time
+    isolates T_data + T_RepEx_over + T_runtime_over — and the stationary
+    distribution N(0, kB T / k_spring) makes exchange statistics
+    analytically checkable.  Temperature exchange only.
+    """
+
+    KB = I.KB
+    # the only ctrl fields this engine reads (skips the umbrella/salt
+    # gathers in the exchange/propagate hot path)
+    ctrl_keys = ("temperature", "beta")
+
+    def __init__(self, n_dim: int = 3, k_spring: float = 1.0,
+                 dt: float = 1e-2, gamma: float = 1.0,
+                 init_temperature: float = 300.0):
+        self.n_dim = n_dim
+        self.k_spring = k_spring
+        self.dt = dt
+        self.gamma = gamma
+        self.init_temperature = init_temperature
+
+    def init_state(self, rng, n_replicas: int):
+        std = (self.KB * self.init_temperature / self.k_spring) ** 0.5
+        x = jax.random.normal(rng, (n_replicas, self.n_dim)) * std
+        return {"x": x}
+
+    def propagate(self, state, ctrl, n_steps, rngs, max_steps: int = 0):
+        max_steps = max_steps or int(jnp.max(n_steps))
+        a = jnp.exp(-self.gamma * self.dt)
+        k_spring, kb = self.k_spring, self.KB
+
+        def one(x, ctrl_row, n, key):
+            var = kb * ctrl_row["temperature"] / k_spring
+            sigma = jnp.sqrt(var * (1.0 - a * a))
+            ts = jnp.arange(max_steps)
+            xi = jax.vmap(lambda t: jax.random.normal(
+                jax.random.fold_in(key, t), x.shape))(ts)     # (S, D)
+            active = ts < n
+            decay = jnp.where(active, a, 1.0)                 # (S,)
+            noise = jnp.where(active[:, None], sigma * xi, 0.0)
+            # x_S = (prod_i f_i) x_0 + sum_i (prod_{j>i} f_j) g_i
+            cp = jnp.cumprod(decay[::-1])[::-1]               # prod_{j>=i}
+            suffix = jnp.concatenate([cp[1:], jnp.ones(1)])   # prod_{j>i}
+            return {"x": cp[0] * x
+                    + jnp.sum(suffix[:, None] * noise, axis=0)}
+
+        return jax.vmap(one)(state["x"], ctrl, n_steps, rngs)
+
+    def _potential(self, x):
+        return 0.5 * self.k_spring * jnp.sum(x * x)
+
+    def energy(self, state, ctrl):
+        u = jax.vmap(self._potential)(state["x"])
+        return ctrl["beta"] * u
+
+    def energy_pair(self, state, ctrl_a, ctrl_b):
+        u = jax.vmap(self._potential)(state["x"])
+        return ctrl_a["beta"] * u, ctrl_b["beta"] * u
+
+    def cross_energy(self, state, ctrl_grid):
+        u = jax.vmap(self._potential)(state["x"])
+        return u[:, None] * ctrl_grid["beta"][None, :]
+
+    def is_failed(self, state):
+        return _any_nonfinite(state)
 
 
 class LJEngine:
     """Lennard-Jones fluid; temperature exchange only (the engine-swap
     demonstration).  Forces optionally via the Pallas kernel."""
+
+    ctrl_keys = ("temperature", "beta")
 
     def __init__(self, n_particles: int = 64, box: float = 12.0,
                  dt: float = 2e-3, gamma: float = 2.0,
@@ -172,12 +272,14 @@ class LJEngine:
         u = jax.vmap(self._potential)(state["pos"])
         return ctrl["beta"] * u
 
+    def energy_pair(self, state, ctrl_a, ctrl_b):
+        """Both ctrl assignments from one O(N^2) potential evaluation."""
+        u = jax.vmap(self._potential)(state["pos"])
+        return ctrl_a["beta"] * u, ctrl_b["beta"] * u
+
     def cross_energy(self, state, ctrl_grid):
         u = jax.vmap(self._potential)(state["pos"])     # (R,)
         return u[:, None] * ctrl_grid["beta"][None, :]  # (R, C)
 
     def is_failed(self, state):
-        bad = jax.tree.map(
-            lambda x: jnp.any(~jnp.isfinite(x), axis=tuple(
-                range(1, x.ndim))), state)
-        return functools.reduce(jnp.logical_or, jax.tree.leaves(bad))
+        return _any_nonfinite(state)

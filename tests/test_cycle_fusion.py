@@ -1,0 +1,197 @@
+"""Cycle-fusion equivalence: ``run_fused`` vs the per-cycle ``run``.
+
+The fused path must reproduce the legacy driver exactly on the discrete
+trajectory — assignments, acceptance counts, failure totals, alive masks —
+for both patterns, both exchange schemes, and both recovery policies.
+Float state matches to XLA-fusion rounding (the scan body and the
+straight-line cycle compile to 1-ulp-different programs); ACROSS chunk
+sizes the fused path is bitwise identical, i.e. chunking is purely a
+dispatch optimization.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import RepExConfig
+from repro.core import REMDDriver, build_grid, control_multiset_ok
+from repro.md import MDEngine
+
+
+def _driver(pattern="synchronous", scheme="neighbor", failure_rate=0.0,
+            relaunch=True, dims=None, n_cycles=6, md_steps=2):
+    cfg = RepExConfig(
+        dimensions=dims or (("temperature", 4),),
+        md_steps_per_cycle=md_steps, n_cycles=n_cycles, pattern=pattern,
+        exchange_scheme=scheme, relaunch_failed=relaunch)
+    return REMDDriver(MDEngine(), cfg, failure_rate=failure_rate)
+
+
+def _run_both(chunk_cycles=4, **kw):
+    d_ref, d_fused = _driver(**kw), _driver(**kw)
+    ens_ref = d_ref.run(d_ref.init())
+    ens_fused = d_fused.run_fused(d_fused.init(), chunk_cycles=chunk_cycles)
+    return d_ref, d_fused, ens_ref, ens_fused
+
+
+def _assert_equivalent(d_ref, d_fused, ens_ref, ens_fused):
+    np.testing.assert_array_equal(np.asarray(ens_ref.assignment),
+                                  np.asarray(ens_fused.assignment))
+    np.testing.assert_array_equal(np.asarray(ens_ref.alive),
+                                  np.asarray(ens_fused.alive))
+    assert int(ens_ref.cycle) == int(ens_fused.cycle)
+    assert int(ens_ref.failures) == int(ens_fused.failures)
+    assert d_ref.acceptance == d_fused.acceptance
+    assert d_ref.acceptance_ratios() == d_fused.acceptance_ratios()
+    # same per-cycle schedule and counters in the history API
+    for h_ref, h_fused in zip(d_ref.history, d_fused.history):
+        for key in ("cycle", "dim", "accept", "attempt", "failed"):
+            assert h_ref[key] == h_fused[key], key
+    np.testing.assert_allclose(np.asarray(ens_ref.state["pos"]),
+                               np.asarray(ens_fused.state["pos"]),
+                               atol=1e-5)
+    assert control_multiset_ok(ens_fused)
+
+
+@pytest.mark.parametrize("scheme", ["neighbor", "matrix"])
+@pytest.mark.parametrize("pattern", ["synchronous", "asynchronous"])
+def test_fused_matches_run(pattern, scheme):
+    d_ref, d_fused, ens_ref, ens_fused = _run_both(pattern=pattern,
+                                                   scheme=scheme)
+    _assert_equivalent(d_ref, d_fused, ens_ref, ens_fused)
+    if pattern == "asynchronous":
+        np.testing.assert_allclose(np.asarray(ens_ref.debt),
+                                   np.asarray(ens_fused.debt), atol=1e-4)
+
+
+@pytest.mark.parametrize("relaunch", [True, False],
+                         ids=["relaunch", "continue"])
+def test_fused_matches_run_under_failures(relaunch):
+    """Injection + detect + recover inside the scan tracks the host path:
+    same failure totals, same recovery decisions, same survivors."""
+    d_ref, d_fused, ens_ref, ens_fused = _run_both(
+        chunk_cycles=2, failure_rate=0.4, relaunch=relaunch, n_cycles=5)
+    np.testing.assert_array_equal(np.asarray(ens_ref.assignment),
+                                  np.asarray(ens_fused.assignment))
+    np.testing.assert_array_equal(np.asarray(ens_ref.alive),
+                                  np.asarray(ens_fused.alive))
+    assert int(ens_ref.failures) == int(ens_fused.failures)
+    assert sum(h["failed"] for h in d_ref.history) \
+        == sum(h["failed"] for h in d_fused.history)
+    assert sum(h["failed"] for h in d_fused.history) > 0
+    assert d_ref.acceptance == d_fused.acceptance
+
+
+def test_fused_bitwise_invariant_across_chunk_sizes():
+    """Chunking must not change ANYTHING: K=1 and K=5 (partial final
+    chunk) produce bit-identical states and identical bookkeeping."""
+    ensembles, drivers = [], []
+    for k in (1, 5):
+        d = _driver(n_cycles=6)
+        ensembles.append(d.run_fused(d.init(), chunk_cycles=k))
+        drivers.append(d)
+    e1, e2 = ensembles
+    assert bool(jnp.array_equal(e1.state["pos"], e2.state["pos"]))
+    assert bool(jnp.array_equal(e1.state["vel"], e2.state["vel"]))
+    np.testing.assert_array_equal(np.asarray(e1.assignment),
+                                  np.asarray(e2.assignment))
+    assert drivers[0].acceptance == drivers[1].acceptance
+    assert [h["cycle"] for h in drivers[0].history] == list(range(6))
+    assert [h["cycle"] for h in drivers[1].history] == list(range(6))
+
+
+def test_fused_multidim_round_robin():
+    """The on-device scheduler reproduces the host round-robin over dims."""
+    d_ref, d_fused, ens_ref, ens_fused = _run_both(
+        chunk_cycles=3, dims=(("temperature", 2), ("umbrella", 2)),
+        n_cycles=4)
+    assert [h["dim"] for h in d_fused.history] == [0, 1, 0, 1]
+    _assert_equivalent(d_ref, d_fused, ens_ref, ens_fused)
+
+
+def test_fused_chunk_checkpointing(tmp_path):
+    """Chunks that cross the checkpoint cadence save their final state."""
+    d = _driver(n_cycles=6)
+    from repro.ckpt import CheckpointManager
+    d.ckpt = CheckpointManager(str(tmp_path), every=2)
+    ens = d.run_fused(d.init(), chunk_cycles=3)
+    assert d.ckpt.latest_step() == 5
+    restored = d.restore(ens)
+    assert restored is not None
+    np.testing.assert_array_equal(np.asarray(restored.assignment),
+                                  np.asarray(ens.assignment))
+
+
+def test_pair_table_matches_neighbor_pairs():
+    """The stacked device table is exactly the host sweeps, padded."""
+    grid = build_grid(RepExConfig(dimensions=(
+        ("temperature", 5), ("salt", 2), ("umbrella", 3))))
+    tab = grid.pair_table
+    assert tab.left.shape == tab.right.shape == tab.valid.shape
+    assert tab.left.shape[:2] == (3, 2)
+    for d in range(3):
+        for p in (0, 1):
+            left, right = grid.neighbor_pairs(d, p)
+            n = len(left)
+            np.testing.assert_array_equal(tab.left[d, p, :n], left)
+            np.testing.assert_array_equal(tab.right[d, p, :n], right)
+            assert tab.valid[d, p, :n].all()
+            assert not tab.valid[d, p, n:].any()
+            # padding is the inert self-pair (0, 0)
+            assert (tab.left[d, p, n:] == 0).all()
+            assert (tab.right[d, p, n:] == 0).all()
+
+
+def test_fused_matches_run_harmonic_engine():
+    """The overhead-probe engine (benchmark headline) is equivalent too."""
+    from repro.md import HarmonicEngine
+    cfg = RepExConfig(dimensions=(("temperature", 6),),
+                      md_steps_per_cycle=10, n_cycles=8)
+    d_ref = REMDDriver(HarmonicEngine(), cfg)
+    d_fused = REMDDriver(HarmonicEngine(), cfg)
+    ens_ref = d_ref.run(d_ref.init())
+    ens_fused = d_fused.run_fused(d_fused.init(), chunk_cycles=4)
+    np.testing.assert_array_equal(np.asarray(ens_ref.assignment),
+                                  np.asarray(ens_fused.assignment))
+    assert d_ref.acceptance == d_fused.acceptance
+    np.testing.assert_allclose(np.asarray(ens_ref.state["x"]),
+                               np.asarray(ens_fused.state["x"]), atol=1e-5)
+
+
+def test_harmonic_engine_stationary_variance():
+    """Exact OU propagator: long propagation reaches N(0, kB T / k)."""
+    import jax
+    from repro.md import HarmonicEngine
+    eng = HarmonicEngine(k_spring=1.0, gamma=1.0, dt=0.05)
+    n = 512
+    state = eng.init_state(jax.random.key(0), n)
+    ctrl = {"temperature": jnp.full(n, 400.0)}
+    keys = jax.random.split(jax.random.key(1), n)
+    out = eng.propagate(state, ctrl, jnp.full(n, 200, jnp.int32), keys,
+                        max_steps=200)
+    var = float(jnp.var(out["x"]))
+    expect = HarmonicEngine.KB * 400.0 / 1.0
+    assert abs(var - expect) / expect < 0.15
+    # masked steps: n_steps=0 replicas must be untouched
+    out0 = eng.propagate(state, ctrl, jnp.zeros(n, jnp.int32), keys,
+                         max_steps=200)
+    np.testing.assert_array_equal(np.asarray(out0["x"]),
+                                  np.asarray(state["x"]))
+
+
+def test_energy_pair_matches_two_energy_calls():
+    """The single-feature-pass exchange evaluation is exact (not approx)."""
+    import jax
+    from repro.core import ctrl_for_assignment
+    eng = MDEngine()
+    grid = build_grid(RepExConfig(dimensions=(("temperature", 4),
+                                              ("salt", 2))))
+    state = eng.init_state(jax.random.key(3), 8)
+    a = jnp.arange(8, dtype=jnp.int32)
+    b = jnp.asarray([1, 0, 3, 2, 5, 4, 7, 6], jnp.int32)
+    ctrl_a = ctrl_for_assignment(grid, a)
+    ctrl_b = ctrl_for_assignment(grid, b)
+    ua, ub = eng.energy_pair(state, ctrl_a, ctrl_b)
+    np.testing.assert_array_equal(np.asarray(ua),
+                                  np.asarray(eng.energy(state, ctrl_a)))
+    np.testing.assert_array_equal(np.asarray(ub),
+                                  np.asarray(eng.energy(state, ctrl_b)))

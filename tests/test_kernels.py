@@ -116,7 +116,11 @@ def test_exchange_matrix_vs_ref(r, c, n_umbrella):
     m_k = xm_ops.exchange_matrix(feats, ctrl, use_kernel=True,
                                  block_r=64, block_c=32)
     m_r = xm_ref.exchange_matrix(feats, ctrl)
-    assert rel_err(m_k, m_r) < 1e-4
+    # error relative to the MATRIX scale: entries span +-1e3, so the
+    # elementwise rel_err floor (1e-3) turns f32 reassociation noise on
+    # near-zero entries into spurious 1e-4-level "errors"
+    scale = float(jnp.max(jnp.abs(m_r)))
+    assert float(jnp.max(jnp.abs(m_k - m_r))) / scale < 1e-5
 
 
 def test_exchange_matrix_consistent_with_engine_energy():
