@@ -258,16 +258,24 @@ def cycle_fusion(rows: List[str]):
     overhead every cycle) and K=64 (overhead amortized 64x).  Two engines
     bracket the regimes of Eq. (1):
 
-      harmonic — the overhead probe (T_MD ~ 0): cycle time IS the
-                 overhead, so fusion's full factor shows (the paper's
-                 scaling regime, where dispatch dominates short cycles);
-      md_chain — compute-heavy toy MD: T_MD dominates on CPU, fusion
-                 recovers only the overhead slice.
+      harmonic      — the overhead probe (T_MD ~ 0): cycle time IS the
+                      overhead, so fusion's full factor shows (the paper's
+                      scaling regime, where dispatch dominates short
+                      cycles);
+      md_chain      — compute-heavy toy MD, replica-major batched
+                      propagate (the default): T_MD is a few wide fused
+                      ops, so fusion + batching pull the row toward the
+                      harmonic floor;
+      md_chain_vmap — the same physics through the per-replica vmap
+                      oracle (``MDEngine(batched=False)``): the PR-1
+                      T_MD-bound baseline, kept to quantify what the
+                      replica-major rewrite bought.
 
     The legacy per-cycle ``run()`` is included as the unfused baseline.
     Results are also emitted to ``BENCH_cycle_fusion.json``.
     ``CYCLE_FUSION_SMOKE=1`` shrinks the sweep for CI smoke runs.
     """
+    import functools
     import json
     import os
 
@@ -283,15 +291,17 @@ def cycle_fusion(rows: List[str]):
     def us_per_cycle(run_once):
         run_once()                       # warm: compile every variant
         best = float("inf")
-        for _ in range(3):               # min-of-3: steady state, not noise
-            t0 = time.perf_counter()
-            run_once()
-            best = min(best, time.perf_counter() - t0)
-        return best / n_cycles * 1e6
+        for _ in range(5):               # min-of-5: steady state, not noise
+            t0 = time.perf_counter()     # (the container's cgroup throttles
+            run_once()                   # in ~100 ms windows; the min needs
+            best = min(best, time.perf_counter() - t0)   # a few shots to
+        return best / n_cycles * 1e6     # land in an unthrottled window)
 
     engines = {"harmonic": HarmonicEngine}
     if not smoke:
         engines["md_chain"] = MDEngine
+        engines["md_chain_vmap"] = functools.partial(MDEngine,
+                                                     batched=False)
     payload: Dict[str, Dict] = {"md_steps_per_cycle": MD_STEPS,
                                 "n_replicas": n_replicas,
                                 "n_cycles": n_cycles, "engines": {}}

@@ -1,9 +1,12 @@
 """Quickstart: 1D temperature replica exchange on a toy peptide.
 
-The minimal RepEx workflow — build an engine, describe the simulation in a
-config, run cycles, read acceptance statistics.  Runs in ~1 minute on CPU.
+The minimal RepEx workflow — build an engine, describe the simulation in
+a config, run fused device-resident cycles, read acceptance statistics.
+Runs in well under a minute on CPU.
 
     PYTHONPATH=src python examples/quickstart.py
+
+(Executed by CI on every push, so this entry point cannot rot.)
 """
 import jax
 import numpy as np
@@ -14,21 +17,40 @@ from repro.md import MDEngine
 
 
 def main():
-    engine = MDEngine()                      # 22-atom chain molecule
+    # The engine: a 22-atom chain molecule under BAOAB Langevin dynamics,
+    # propagated replica-major (all replicas advance through a few wide
+    # fused ops per step).  Any object satisfying the SimulationEngine
+    # protocol works here — see docs/ENGINES.md.
+    engine = MDEngine()
+
+    # The simulation, fully described by configuration (the paper's
+    # usability requirement): one temperature dimension = an 8-window
+    # geometric ladder 273..373 K; each cycle propagates every replica
+    # 10 MD steps and then runs one DEO neighbor-exchange sweep.
     cfg = RepExConfig(
         engine="md",
-        dimensions=(("temperature", 8),),    # 8-window ladder 273..373 K
-        md_steps_per_cycle=50,
-        n_cycles=10,
+        dimensions=(("temperature", 8),),
+        md_steps_per_cycle=10,
+        n_cycles=48,
         pattern="synchronous",
     )
     driver = REMDDriver(engine, cfg)
     ens = driver.init()
-    ens = driver.run(ens, verbose=True)
 
+    # run_fused(chunk_cycles=K) compiles K complete propagate -> exchange
+    # -> detect -> recover cycles into ONE lax.scan dispatch: the per-cycle
+    # host round-trips and dispatch overheads of Eq. (1) are paid once per
+    # chunk instead of once per cycle (~6-9x cycles/sec at K=64 for
+    # overhead-bound workloads; see README benchmark table).  The discrete
+    # trajectory (assignments, acceptance, failures) matches the per-cycle
+    # run() exactly, float state to ~1 ulp, and is invariant to K.
+    ens = driver.run_fused(ens, chunk_cycles=16, verbose=True)
+
+    # Exchanges swap control parameters, never configurations, so the
+    # ctrl multiset must survive any run — the core RE invariant.
     print("\ncontrol multiset preserved:", control_multiset_ok(ens))
     print("acceptance ratios:", driver.acceptance_ratios())
-    # temperature trajectory: which ctrl (ladder rung) each replica holds
+    # which ladder rung (ctrl index) each replica ended up holding
     print("final assignment:", np.asarray(ens.assignment))
     temps = np.asarray(driver.grid.values["temperature"])
     print("final replica temperatures:",

@@ -142,13 +142,21 @@ def build_grid(cfg: RepExConfig) -> ControlGrid:
         elif d.kind == "salt":
             salt = flat
 
+    # Only carry ctrl fields for dimensions the grid actually has: engines
+    # and energy reductions default absent fields to inert constants, so a
+    # T-only ladder skips the umbrella/salt gathers every cycle AND lets
+    # XLA constant-fold the dead bias/salt terms (and their gradients) out
+    # of the propagate hot loop.
     values = {
         "temperature": jnp.asarray(temperature, jnp.float32),
         "beta": jnp.asarray(1.0 / (KB * temperature), jnp.float32),
-        "umbrella_center": jnp.asarray(umbrella_centers, jnp.float32),
-        "umbrella_k": jnp.asarray(umbrella_k, jnp.float32),
-        "salt": jnp.asarray(salt, jnp.float32),
     }
+    if n_umbrella:
+        values["umbrella_center"] = jnp.asarray(umbrella_centers,
+                                                jnp.float32)
+        values["umbrella_k"] = jnp.asarray(umbrella_k, jnp.float32)
+    if any(d.kind == "salt" for d in dims):
+        values["salt"] = jnp.asarray(salt, jnp.float32)
     return ControlGrid(dims=tuple(dims), values=values, shape=shape)
 
 

@@ -46,7 +46,8 @@ def shard_replicas(tree, mesh):
 
 def per_replica_keys(rng, n_replicas: int):
     """Replica-indexed key assignment — INVARIANT across execution modes,
-    so Mode I and Mode II produce bit-identical trajectories (tested)."""
+    so Mode I and Mode II consume identical noise streams and produce
+    trajectories that agree to float reassociation (tested)."""
     return jax.random.split(rng, n_replicas)
 
 

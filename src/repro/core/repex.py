@@ -31,8 +31,11 @@ Two execution paths pay these terms very differently:
                    by 1/K — the overhead terms Eq. (1) blames for poor
                    scaling shrink toward zero as K grows, which is what
                    lets short-cycle workloads (md_steps_per_cycle <= 10)
-                   run at hardware speed.  Trajectories are bit-identical
-                   to ``run()`` for the same seed.
+                   run at hardware speed.  Discrete trajectories
+                   (assignments, acceptance, failure counts) are
+                   identical to ``run()`` for the same seed; float state
+                   matches to XLA-fusion rounding (~1 ulp) and is
+                   bitwise-invariant across chunk sizes.
 
 The driver supports both patterns, both execution modes, failure
 injection/recovery, and periodic ensemble checkpointing (restart-able,

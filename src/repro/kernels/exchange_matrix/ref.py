@@ -20,12 +20,12 @@ def exchange_matrix(features, ctrl):
     psi = jnp.rad2deg(features["psi"])[:, None]
     beta = ctrl["beta"][None, :]                    # (1, C)
     salt = ctrl.get("salt")
-    center = ctrl["umbrella_center"]                # (C, U)
-    k = ctrl["umbrella_k"]
+    center = ctrl.get("umbrella_center")            # (C, U) or absent
+    k = ctrl.get("umbrella_k")
     u = features["u_base"][:, None] + (
         (1.0 - 0.5 * (salt[None, :] if salt is not None else 0.0))
         * features["u_elec"][:, None])
-    n_u = center.shape[1]
+    n_u = center.shape[1] if center is not None else 0
     angles = [phi, psi][:n_u]
     for a in range(n_u):
         d = _wrap(angles[a] - center[None, :, a])

@@ -5,11 +5,14 @@ row 3 = validity mask (padding atoms are masked out), rows 4..7 zero.
 The 8-row major dim matches the f32 sublane tile; N is padded to the
 lane width so (8, BN) blocks are native VMEM tiles.
 
-Energy kernel: grid (nI, nJ) accumulating a scalar (1,1) output tile.
-Force  kernel: grid (nI, nJ), j innermost; the (8, BI) force tile for
-i-block stays resident while j-tiles stream (same revisiting pattern as
-flash attention).  The MD hot loop calls forces; energy backs the
-custom_vjp in ops.
+The canonical kernels are replica-batched with a leading REPLICA grid
+dimension: coords are (R, 8, N) and the grid is (R, nI, nJ) with the
+replica index outermost, j innermost — the (1, 8, BI) force tile for an
+(r, i) block stays resident while j-tiles stream (same revisiting
+pattern as flash attention).  One launch propagates the whole ensemble,
+the replica-major execution the RepEx scalability claim needs from its
+engines.  The single-configuration entry points are R = 1 wrappers.
+The MD hot loop calls forces; energy backs the custom_vjp in ops.
 """
 from __future__ import annotations
 
@@ -43,74 +46,101 @@ def _pair_blocks(ci, cj, sigma, box, bi, bj, ii, jj):
     return r2, s6, mask, (dx, dy, dz)
 
 
-def _energy_kernel(ci_ref, cj_ref, o_ref, *, sigma, eps, box, bi, bj):
-    ii = pl.program_id(0)
-    jj = pl.program_id(1)
-
-    @pl.when((ii == 0) & (jj == 0))
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    r2, s6, mask, _ = _pair_blocks(ci_ref[...], cj_ref[...], sigma, box,
-                                   bi, bj, ii, jj)
-    e = 4.0 * eps * (s6 * s6 - s6) * mask
-    o_ref[0, 0] += 0.5 * jnp.sum(e)
-
-
-def _forces_kernel(ci_ref, cj_ref, o_ref, *, sigma, eps, box, bi, bj):
-    ii = pl.program_id(0)
-    jj = pl.program_id(1)
-
-    @pl.when(jj == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    r2, s6, mask, (dx, dy, dz) = _pair_blocks(ci_ref[...], cj_ref[...],
-                                              sigma, box, bi, bj, ii, jj)
-    coef = 24.0 * eps * (2.0 * s6 * s6 - s6) / r2 * mask
-    fx = jnp.sum(coef * dx, axis=1)
-    fy = jnp.sum(coef * dy, axis=1)
-    fz = jnp.sum(coef * dz, axis=1)
-    zero = jnp.zeros_like(fx)
-    o_ref[...] += jnp.stack([fx, fy, fz, zero, zero, zero, zero, zero])
-
-
 def lj_energy_kernel(coords, *, sigma: float, eps: float, box: float,
                      block: int = 128, interpret: bool = False) -> jax.Array:
-    """coords: (8, N) packed; returns scalar energy."""
-    n = coords.shape[1]
-    block = min(block, n)
-    assert n % block == 0
-    nb = n // block
-    kern = functools.partial(_energy_kernel, sigma=sigma, eps=eps, box=box,
-                             bi=block, bj=block)
-    out = pl.pallas_call(
-        kern,
-        grid=(nb, nb),
-        in_specs=[pl.BlockSpec((8, block), lambda i, j: (0, i)),
-                  pl.BlockSpec((8, block), lambda i, j: (0, j))],
-        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        interpret=interpret,
-    )(coords, coords)
-    return out[0, 0]
+    """coords: (8, N) packed; returns scalar energy.
+
+    Thin wrapper over the replica-batched kernel with R = 1, so the tile
+    math and init/accumulate logic live in exactly one kernel body."""
+    return lj_energy_kernel_batched(coords[None], sigma=sigma, eps=eps,
+                                    box=box, block=block,
+                                    interpret=interpret)[0]
 
 
 def lj_forces_kernel(coords, *, sigma: float, eps: float, box: float,
                      block: int = 128, interpret: bool = False) -> jax.Array:
     """coords: (8, N) packed; returns (8, N) with rows 0..2 = forces."""
-    n = coords.shape[1]
+    return lj_forces_kernel_batched(coords[None], sigma=sigma, eps=eps,
+                                    box=box, block=block,
+                                    interpret=interpret)[0]
+
+
+# -- replica-batched kernels (leading replica grid dimension) --------------
+
+
+def _energy_kernel_batched(ci_ref, cj_ref, o_ref, *, sigma, eps, box,
+                           bi, bj):
+    ii = pl.program_id(1)
+    jj = pl.program_id(2)
+
+    @pl.when((ii == 0) & (jj == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    r2, s6, mask, _ = _pair_blocks(ci_ref[0], cj_ref[0], sigma, box,
+                                   bi, bj, ii, jj)
+    e = 4.0 * eps * (s6 * s6 - s6) * mask
+    o_ref[0, 0, 0] += 0.5 * jnp.sum(e)
+
+
+def _forces_kernel_batched(ci_ref, cj_ref, o_ref, *, sigma, eps, box,
+                           bi, bj):
+    ii = pl.program_id(1)
+    jj = pl.program_id(2)
+
+    @pl.when(jj == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    r2, s6, mask, (dx, dy, dz) = _pair_blocks(ci_ref[0], cj_ref[0], sigma,
+                                              box, bi, bj, ii, jj)
+    coef = 24.0 * eps * (2.0 * s6 * s6 - s6) / r2 * mask
+    fx = jnp.sum(coef * dx, axis=1)
+    fy = jnp.sum(coef * dy, axis=1)
+    fz = jnp.sum(coef * dz, axis=1)
+    zero = jnp.zeros_like(fx)
+    o_ref[...] += jnp.stack([fx, fy, fz, zero, zero, zero, zero,
+                             zero])[None]
+
+
+def lj_energy_kernel_batched(coords, *, sigma: float, eps: float,
+                             box: float, block: int = 128,
+                             interpret: bool = False) -> jax.Array:
+    """coords: (R, 8, N) packed; returns (R,) energies, one launch."""
+    r, _, n = coords.shape
     block = min(block, n)
     assert n % block == 0
     nb = n // block
-    kern = functools.partial(_forces_kernel, sigma=sigma, eps=eps, box=box,
-                             bi=block, bj=block)
+    kern = functools.partial(_energy_kernel_batched, sigma=sigma, eps=eps,
+                             box=box, bi=block, bj=block)
+    out = pl.pallas_call(
+        kern,
+        grid=(r, nb, nb),
+        in_specs=[pl.BlockSpec((1, 8, block), lambda q, i, j: (q, 0, i)),
+                  pl.BlockSpec((1, 8, block), lambda q, i, j: (q, 0, j))],
+        out_specs=pl.BlockSpec((1, 1, 1), lambda q, i, j: (q, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1, 1), jnp.float32),
+        interpret=interpret,
+    )(coords, coords)
+    return out[:, 0, 0]
+
+
+def lj_forces_kernel_batched(coords, *, sigma: float, eps: float,
+                             box: float, block: int = 128,
+                             interpret: bool = False) -> jax.Array:
+    """coords: (R, 8, N) packed; returns (R, 8, N), rows 0..2 = forces."""
+    r, _, n = coords.shape
+    block = min(block, n)
+    assert n % block == 0
+    nb = n // block
+    kern = functools.partial(_forces_kernel_batched, sigma=sigma, eps=eps,
+                             box=box, bi=block, bj=block)
     return pl.pallas_call(
         kern,
-        grid=(nb, nb),
-        in_specs=[pl.BlockSpec((8, block), lambda i, j: (0, i)),
-                  pl.BlockSpec((8, block), lambda i, j: (0, j))],
-        out_specs=pl.BlockSpec((8, block), lambda i, j: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((8, n), jnp.float32),
+        grid=(r, nb, nb),
+        in_specs=[pl.BlockSpec((1, 8, block), lambda q, i, j: (q, 0, i)),
+                  pl.BlockSpec((1, 8, block), lambda q, i, j: (q, 0, j))],
+        out_specs=pl.BlockSpec((1, 8, block), lambda q, i, j: (q, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, 8, n), jnp.float32),
         interpret=interpret,
     )(coords, coords)

@@ -3,6 +3,11 @@ pad to lane multiples, dispatch to the Pallas kernels (interpret on CPU),
 and expose energy with an analytic custom_vjp whose backward IS the forces
 kernel — the gradient of the MD hot loop never falls back to autodiff
 through the kernel.
+
+``lj_energy_batched`` / ``lj_forces_batched`` are the replica-major
+variants: (R, N, 3) stacks packed to (R, 8, N') and dispatched through
+the replica-grid kernels, energy again carrying a custom_vjp whose
+backward is the batched forces kernel.
 """
 from __future__ import annotations
 
@@ -54,3 +59,47 @@ def lj_forces(pos, sigma: float, eps: float, box: float, block: int = 128,
     out = K.lj_forces_kernel(c, sigma=sigma, eps=eps, box=box, block=block,
                              interpret=interp)
     return out[0:3, :n].T
+
+
+# -- replica-batched wrappers (leading replica axis, one kernel launch) ----
+
+
+def _pack_batched(pos, block: int):
+    r, n = pos.shape[0], pos.shape[1]
+    n_pad = max(block, ((n + block - 1) // block) * block)
+    c = jnp.zeros((r, 8, n_pad), jnp.float32)
+    c = c.at[:, 0:3, :n].set(jnp.swapaxes(pos, 1, 2).astype(jnp.float32))
+    c = c.at[:, 3, :n].set(1.0)   # validity row
+    return c, n
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def lj_energy_batched(pos, sigma: float, eps: float, box: float,
+                      block: int = 128, interpret: Optional[bool] = None):
+    """(R, N, 3) -> (R,) energies through the replica-grid kernel."""
+    interp = default_interpret() if interpret is None else interpret
+    c, n = _pack_batched(pos, block)
+    return K.lj_energy_kernel_batched(c, sigma=sigma, eps=eps, box=box,
+                                      block=block, interpret=interp)
+
+
+def _fwd_batched(pos, sigma, eps, box, block, interpret):
+    return lj_energy_batched(pos, sigma, eps, box, block, interpret), pos
+
+
+def _bwd_batched(sigma, eps, box, block, interpret, pos, g):
+    f = lj_forces_batched(pos, sigma, eps, box, block, interpret)
+    return (-g[:, None, None] * f,)    # dU/dx = -F, per replica
+
+
+lj_energy_batched.defvjp(_fwd_batched, _bwd_batched)
+
+
+def lj_forces_batched(pos, sigma: float, eps: float, box: float,
+                      block: int = 128, interpret: Optional[bool] = None):
+    """(R, N, 3) -> (R, N, 3) forces through the replica-grid kernel."""
+    interp = default_interpret() if interpret is None else interpret
+    c, n = _pack_batched(pos, block)
+    out = K.lj_forces_kernel_batched(c, sigma=sigma, eps=eps, box=box,
+                                     block=block, interpret=interp)
+    return jnp.swapaxes(out[:, 0:3, :n], 1, 2)

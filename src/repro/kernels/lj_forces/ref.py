@@ -1,4 +1,9 @@
-"""Pure-jnp oracle: all-pairs Lennard-Jones energy/forces, minimum image."""
+"""Pure-jnp oracle: all-pairs Lennard-Jones energy/forces, minimum image.
+
+Batch-agnostic: ``pos`` may be a single configuration (N, 3) or a replica
+stack (..., N, 3); energies reduce over the trailing pair axes only, so
+the replica-major engines call the SAME oracle the kernel tests use.
+"""
 from __future__ import annotations
 
 import jax
@@ -6,9 +11,9 @@ import jax.numpy as jnp
 
 
 def _pair_terms(pos, sigma: float, box: float):
-    disp = pos[:, None, :] - pos[None, :, :]
+    disp = pos[..., :, None, :] - pos[..., None, :, :]
     disp = disp - box * jnp.round(disp / box)
-    n = pos.shape[0]
+    n = pos.shape[-2]
     r2 = jnp.sum(disp * disp, -1) + jnp.eye(n)      # guard the diagonal
     s6 = (sigma * sigma / r2) ** 3
     mask = 1.0 - jnp.eye(n)
@@ -16,13 +21,14 @@ def _pair_terms(pos, sigma: float, box: float):
 
 
 def lj_energy(pos, sigma: float, eps: float, box: float) -> jax.Array:
+    """(..., N, 3) -> (...) total LJ energy per configuration."""
     _, _, s6, mask = _pair_terms(pos, sigma, box)
     e = 4.0 * eps * (s6 * s6 - s6) * mask
-    return 0.5 * jnp.sum(e)
+    return 0.5 * jnp.sum(e, axis=(-2, -1))
 
 
 def lj_forces(pos, sigma: float, eps: float, box: float) -> jax.Array:
-    """F = -dU/dx, analytic."""
+    """F = -dU/dx, analytic: (..., N, 3) -> (..., N, 3)."""
     disp, r2, s6, mask = _pair_terms(pos, sigma, box)
     coef = 24.0 * eps * (2.0 * s6 * s6 - s6) / r2 * mask
-    return jnp.sum(coef[..., None] * disp, axis=1)
+    return jnp.sum(coef[..., None] * disp, axis=-2)

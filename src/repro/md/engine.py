@@ -14,14 +14,32 @@
                      paper's Eq. (1) — the regime its scaling analysis
                      (and our cycle-fusion benchmark) targets.
 
-MDEngine/LJEngine vmap over the replica axis and run a masked ``fori_loop``
-over ``max_steps`` so per-replica step counts (async pattern) compile to
-one program; HarmonicEngine closes the step loop analytically.
+Every engine has two propagate/energy implementations selected by the
+``batched`` constructor flag:
+
+  batched=True (default) — REPLICA-MAJOR: the replica axis is the leading
+      axis of a few wide fused ops (stacked gathers, one (R, N, N)
+      pairwise pass, one stacked BAOAB update).  Per-step op count is
+      independent of R, which is what lets the md_chain row of the
+      cycle-fusion benchmark approach the harmonic (pure-overhead) row.
+  batched=False — the per-replica reference oracle: ``jax.vmap`` over
+      scalar-sized single-replica programs.  Kept verbatim from before
+      the replica-major rewrite; the equivalence suite
+      (tests/test_batched_equivalence.py) pins the batched path to it.
+
+Both paths run a masked ``fori_loop`` over ``max_steps`` so per-replica
+step counts (async pattern) compile to one program, and both fold the
+SAME per-replica keys, so trajectories agree to float tolerance and
+exchange decisions bit-for-bit.  HarmonicEngine closes the step loop
+analytically either way.
+
+See docs/ENGINES.md for the full protocol contract and a worked custom
+engine.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,11 +61,12 @@ def _any_nonfinite(state) -> jax.Array:
 class MDEngine:
     def __init__(self, system: Optional[MolecularSystem] = None,
                  dt: float = 5e-4, gamma: float = 5.0,
-                 init_temperature: float = 300.0):
+                 init_temperature: float = 300.0, batched: bool = True):
         self.system = system or chain_molecule()
         self.dt = dt
         self.gamma = gamma
         self.init_temperature = init_temperature
+        self.batched = batched
 
     # -- protocol ----------------------------------------------------------
 
@@ -67,6 +86,23 @@ class MDEngine:
     def propagate(self, state, ctrl, n_steps, rngs, max_steps: int = 0):
         """``rngs``: per-replica key array (R,) — mode-invariant."""
         max_steps = max_steps or int(jnp.max(n_steps))
+        if not self.batched:
+            return self._propagate_vmap(state, ctrl, n_steps, rngs,
+                                        max_steps)
+        sys = self.system
+        dt, gamma = self.dt, self.gamma
+        temp = ctrl["temperature"]
+        # Replicas are independent, so the gradient of the replica-summed
+        # batched potential is the stacked per-replica force field — one
+        # wide backward pass instead of R small ones.
+        force_fn = jax.grad(
+            lambda p: -jnp.sum(E.batched_potential_energy(p, sys, ctrl)))
+        return I.propagate_replica_major(state, force_fn, sys.masses, temp,
+                                         n_steps, rngs, max_steps, dt,
+                                         gamma)
+
+    def _propagate_vmap(self, state, ctrl, n_steps, rngs, max_steps: int):
+        """Reference oracle: vmap over single-replica programs."""
         sys = self.system
         dt, gamma = self.dt, self.gamma
         keys = rngs
@@ -93,6 +129,9 @@ class MDEngine:
         return jax.vmap(one)(state["pos"], state["vel"], ctrl, n_steps, keys)
 
     def energy(self, state, ctrl):
+        if self.batched:
+            f = E.batched_features(state["pos"], self.system)
+            return E.batched_reduced_energy_from_features(f, ctrl)
         sys = self.system
 
         def one(pos, ctrl_row):
@@ -102,9 +141,10 @@ class MDEngine:
         return jax.vmap(one)(state["pos"], ctrl)
 
     def replica_features(self, state):
+        if self.batched:
+            return E.batched_features(state["pos"], self.system)
         sys = self.system
-        f = jax.vmap(lambda p: E.features(p, sys))(state["pos"])
-        return f
+        return jax.vmap(lambda p: E.features(p, sys))(state["pos"])
 
     def energy_pair(self, state, ctrl_a, ctrl_b):
         """u(x; ctrl_a), u(x; ctrl_b) from ONE feature pass.
@@ -113,14 +153,18 @@ class MDEngine:
         exchange phase's self/swap evaluation needs them only once; each
         ctrl assignment is then an O(1) reduction over the features."""
         f = self.replica_features(state)
+        if self.batched:
+            return (E.batched_reduced_energy_from_features(f, ctrl_a),
+                    E.batched_reduced_energy_from_features(f, ctrl_b))
         red = jax.vmap(E.reduced_energy_from_features)
         return red(f, ctrl_a), red(f, ctrl_b)
 
     def cross_energy(self, state, ctrl_grid):
         """(R, C) matrix u_c(x_i) via the feature decomposition.
 
-        Features are computed once per replica (O(R N^2)); matrix assembly
-        is the tiled ``exchange_matrix`` kernel (jnp oracle by default)."""
+        Features are computed once per replica (O(R N^2), one batched
+        pass); matrix assembly is the tiled ``exchange_matrix`` kernel
+        (jnp oracle by default)."""
         from repro.kernels.exchange_matrix import ops as xops
         f = self.replica_features(state)
         return xops.exchange_matrix(f, ctrl_grid)
@@ -152,12 +196,13 @@ class HarmonicEngine:
 
     def __init__(self, n_dim: int = 3, k_spring: float = 1.0,
                  dt: float = 1e-2, gamma: float = 1.0,
-                 init_temperature: float = 300.0):
+                 init_temperature: float = 300.0, batched: bool = True):
         self.n_dim = n_dim
         self.k_spring = k_spring
         self.dt = dt
         self.gamma = gamma
         self.init_temperature = init_temperature
+        self.batched = batched
 
     def init_state(self, rng, n_replicas: int):
         std = (self.KB * self.init_temperature / self.k_spring) ** 0.5
@@ -168,37 +213,56 @@ class HarmonicEngine:
         max_steps = max_steps or int(jnp.max(n_steps))
         a = jnp.exp(-self.gamma * self.dt)
         k_spring, kb = self.k_spring, self.KB
+        ts = jnp.arange(max_steps)
 
-        def one(x, ctrl_row, n, key):
-            var = kb * ctrl_row["temperature"] / k_spring
-            sigma = jnp.sqrt(var * (1.0 - a * a))
-            ts = jnp.arange(max_steps)
-            xi = jax.vmap(lambda t: jax.random.normal(
-                jax.random.fold_in(key, t), x.shape))(ts)     # (S, D)
-            active = ts < n
-            decay = jnp.where(active, a, 1.0)                 # (S,)
-            noise = jnp.where(active[:, None], sigma * xi, 0.0)
-            # x_S = (prod_i f_i) x_0 + sum_i (prod_{j>i} f_j) g_i
-            cp = jnp.cumprod(decay[::-1])[::-1]               # prod_{j>=i}
-            suffix = jnp.concatenate([cp[1:], jnp.ones(1)])   # prod_{j>i}
-            return {"x": cp[0] * x
-                    + jnp.sum(suffix[:, None] * noise, axis=0)}
+        if not self.batched:
+            def one(x, ctrl_row, n, key):
+                var = kb * ctrl_row["temperature"] / k_spring
+                sigma = jnp.sqrt(var * (1.0 - a * a))
+                xi = jax.vmap(lambda t: jax.random.normal(
+                    jax.random.fold_in(key, t), x.shape))(ts)     # (S, D)
+                active = ts < n
+                decay = jnp.where(active, a, 1.0)                 # (S,)
+                noise = jnp.where(active[:, None], sigma * xi, 0.0)
+                # x_S = (prod_i f_i) x_0 + sum_i (prod_{j>i} f_j) g_i
+                cp = jnp.cumprod(decay[::-1])[::-1]               # prod_{j>=i}
+                suffix = jnp.concatenate([cp[1:], jnp.ones(1)])   # prod_{j>i}
+                return {"x": cp[0] * x
+                        + jnp.sum(suffix[:, None] * noise, axis=0)}
 
-        return jax.vmap(one)(state["x"], ctrl, n_steps, rngs)
+            return jax.vmap(one)(state["x"], ctrl, n_steps, rngs)
 
-    def _potential(self, x):
-        return 0.5 * self.k_spring * jnp.sum(x * x)
+        x = state["x"]                                            # (R, D)
+        n_rep = x.shape[0]
+        var = kb * ctrl["temperature"] / k_spring                 # (R,)
+        sigma = jnp.sqrt(var * (1.0 - a * a))
+        xi = jax.vmap(lambda key: jax.vmap(lambda t: jax.random.normal(
+            jax.random.fold_in(key, t), x.shape[1:]))(ts))(rngs)  # (R, S, D)
+        active = ts[None, :] < n_steps[:, None]                   # (R, S)
+        decay = jnp.where(active, a, 1.0)
+        noise = jnp.where(active[..., None],
+                          sigma[:, None, None] * xi, 0.0)
+        cp = jnp.cumprod(decay[:, ::-1], axis=1)[:, ::-1]
+        suffix = jnp.concatenate([cp[:, 1:], jnp.ones((n_rep, 1))], axis=1)
+        return {"x": cp[:, 0:1] * x
+                + jnp.sum(suffix[..., None] * noise, axis=1)}
+
+    def _potential_stack(self, x):
+        """(R, D) -> (R,)."""
+        if self.batched:
+            return 0.5 * self.k_spring * jnp.sum(x * x, axis=-1)
+        return jax.vmap(
+            lambda xi: 0.5 * self.k_spring * jnp.sum(xi * xi))(x)
 
     def energy(self, state, ctrl):
-        u = jax.vmap(self._potential)(state["x"])
-        return ctrl["beta"] * u
+        return ctrl["beta"] * self._potential_stack(state["x"])
 
     def energy_pair(self, state, ctrl_a, ctrl_b):
-        u = jax.vmap(self._potential)(state["x"])
+        u = self._potential_stack(state["x"])
         return ctrl_a["beta"] * u, ctrl_b["beta"] * u
 
     def cross_energy(self, state, ctrl_grid):
-        u = jax.vmap(self._potential)(state["x"])
+        u = self._potential_stack(state["x"])
         return u[:, None] * ctrl_grid["beta"][None, :]
 
     def is_failed(self, state):
@@ -207,26 +271,41 @@ class HarmonicEngine:
 
 class LJEngine:
     """Lennard-Jones fluid; temperature exchange only (the engine-swap
-    demonstration).  Forces optionally via the Pallas kernel."""
+    demonstration).  Forces optionally via the Pallas kernel — with
+    ``batched=True`` (default) the kernel runs with a leading REPLICA
+    grid dimension, so all R fluids stream through one kernel launch."""
 
     ctrl_keys = ("temperature", "beta")
 
     def __init__(self, n_particles: int = 64, box: float = 12.0,
                  dt: float = 2e-3, gamma: float = 2.0,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, batched: bool = True):
         self.n = n_particles
         self.box = box
         self.dt = dt
         self.gamma = gamma
         self.use_pallas = use_pallas
+        self.batched = batched
         self.masses = jnp.full(n_particles, 39.9)    # argon
         self.sigma = 3.4
         self.eps = 0.238
 
     def _potential(self, pos):
+        """Single-replica (N, 3) -> scalar (reference path)."""
         if self.use_pallas:
             from repro.kernels.lj_forces import ops as ljops
             return ljops.lj_energy(pos, self.sigma, self.eps, self.box)
+        from repro.kernels.lj_forces import ref as ljref
+        return ljref.lj_energy(pos, self.sigma, self.eps, self.box)
+
+    def _potential_stack(self, pos):
+        """Replica stack (R, N, 3) -> (R,)."""
+        if not self.batched:
+            return jax.vmap(self._potential)(pos)
+        if self.use_pallas:
+            from repro.kernels.lj_forces import ops as ljops
+            return ljops.lj_energy_batched(pos, self.sigma, self.eps,
+                                           self.box)
         from repro.kernels.lj_forces import ref as ljref
         return ljref.lj_energy(pos, self.sigma, self.eps, self.box)
 
@@ -247,6 +326,22 @@ class LJEngine:
 
     def propagate(self, state, ctrl, n_steps, rngs, max_steps: int = 0):
         max_steps = max_steps or int(jnp.max(n_steps))
+        if not self.batched:
+            return self._propagate_vmap(state, ctrl, n_steps, rngs,
+                                        max_steps)
+        temp = ctrl["temperature"]
+        force_fn = jax.grad(lambda p: -jnp.sum(self._potential_stack(p)))
+        # The shared force is evaluated at the wrapped positions; the
+        # vmap oracle evaluates its trailing half-B at the pre-wrap
+        # positions, which agrees up to fp rounding (the minimum-image
+        # force is wrap-invariant).
+        return I.propagate_replica_major(state, force_fn, self.masses,
+                                         temp, n_steps, rngs, max_steps,
+                                         self.dt, self.gamma,
+                                         box=self.box)
+
+    def _propagate_vmap(self, state, ctrl, n_steps, rngs, max_steps: int):
+        """Reference oracle: vmap over single-replica programs."""
         keys = rngs
         force_fn = jax.grad(lambda p: -self._potential(p))
 
@@ -269,16 +364,15 @@ class LJEngine:
         return jax.vmap(one)(state["pos"], state["vel"], ctrl, n_steps, keys)
 
     def energy(self, state, ctrl):
-        u = jax.vmap(self._potential)(state["pos"])
-        return ctrl["beta"] * u
+        return ctrl["beta"] * self._potential_stack(state["pos"])
 
     def energy_pair(self, state, ctrl_a, ctrl_b):
         """Both ctrl assignments from one O(N^2) potential evaluation."""
-        u = jax.vmap(self._potential)(state["pos"])
+        u = self._potential_stack(state["pos"])
         return ctrl_a["beta"] * u, ctrl_b["beta"] * u
 
     def cross_energy(self, state, ctrl_grid):
-        u = jax.vmap(self._potential)(state["pos"])     # (R,)
+        u = self._potential_stack(state["pos"])        # (R,)
         return u[:, None] * ctrl_grid["beta"][None, :]  # (R, C)
 
     def is_failed(self, state):

@@ -5,7 +5,7 @@ acceleration = F / m * AKMA  (AKMA = 418.4 converts kcal/mol/A/amu to A/ps^2).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +34,100 @@ def baoab_step(pos, vel, rng, force_fn: Callable, masses, temperature,
     f = force_fn(pos)
     vel = vel + 0.5 * dt * AKMA * f / m                      # B
     return pos, vel
+
+
+def baoab_fused_iteration(i, pos, vel, noise_i, force_fn: Callable, masses,
+                          temperature, n_steps, max_steps: int,
+                          dt: float = 5e-4, gamma: float = 5.0,
+                          box: float = 0.0):
+    """One force-sharing BAOAB iteration over the whole replica stack.
+
+    The BAOAB sequence per step is B A O A B, and the force of a step's
+    trailing half-B equals the force of the NEXT step's leading half-B
+    (positions do not move between them).  Shifting the loop boundary to
+    sit between those two half-kicks lets every iteration evaluate the
+    force ONCE and spend it twice:
+
+        iteration i:  f = F(pos_i)
+                      trailing half-B of step i-1   (masked for i == 0)
+                      leading  half-B + A O A of step i  (masked for
+                                                          i == max_steps)
+
+    Engines run ``max_steps + 1`` iterations — ``max_steps + 1`` force
+    evaluations total instead of ``2 * max_steps`` — with every force
+    evaluation INSIDE the loop body, which keeps XLA's compiled rounding
+    identical across enclosing scan lengths (the fused driver's
+    bitwise-across-chunk-sizes guarantee).
+
+    pos/vel: (R, N, 3); temperature/n_steps: (R,) traced per-replica;
+    ``noise_i``: this iteration's pre-drawn N(0,1) array (R, N, 3) (see
+    :func:`stacked_step_noise`).  Per-replica masking: a lane advances
+    through step ``t`` iff ``t < n_steps[lane]``; exhausted lanes stay
+    bitwise frozen.  ``box > 0`` wraps positions periodically after the
+    step (the minimum-image force is wrap-invariant up to fp rounding).
+    Returns (pos, vel).
+    """
+    m = masses[None, :, None]
+    f = force_fn(pos)
+    kick = 0.5 * dt * AKMA * f / m
+    # trailing half-B of step i-1: existed and was active iff i-1 < n
+    trail = ((i >= 1) & (i <= n_steps))[:, None, None]
+    vel = jnp.where(trail, vel + kick, vel)
+    # step i: leading half-B, A, O, A (its trailing B is the NEXT
+    # iteration's force)
+    lead = ((i < n_steps) & (i < max_steps))[:, None, None]
+    c1 = jnp.exp(-gamma * dt)
+    sigma = jnp.sqrt(AKMA * KB * temperature[:, None]
+                     / masses[None, :])[..., None]           # (R, N, 1)
+    nvel = vel + kick                                        # B
+    npos = pos + 0.5 * dt * nvel                             # A
+    nvel = c1 * nvel + jnp.sqrt(1 - c1 * c1) * sigma * noise_i   # O
+    npos = npos + 0.5 * dt * nvel                            # A
+    if box > 0:
+        npos = jnp.mod(npos, box)
+    return jnp.where(lead, npos, pos), jnp.where(lead, nvel, vel)
+
+
+def propagate_replica_major(state, force_fn: Callable, masses, temperature,
+                            n_steps, rngs, max_steps: int,
+                            dt: float = 5e-4, gamma: float = 5.0,
+                            box: float = 0.0):
+    """The shared replica-major propagate loop: pre-drawn noise +
+    ``max_steps + 1`` force-sharing BAOAB iterations.
+
+    This helper owns the subtle parts of the batched-propagate contract
+    (iteration count, noise indexing, per-lane masking) so every engine
+    shares one implementation; engines supply only the stacked
+    ``force_fn`` and the optional periodic ``box``.
+    ``state``: {"pos", "vel"} with leading replica axis.
+    """
+    noise = stacked_step_noise(rngs, max_steps + 1, state["pos"].shape[1:])
+
+    def body(i, carry):
+        pos, vel = carry
+        return baoab_fused_iteration(i, pos, vel, noise[i], force_fn,
+                                     masses, temperature, n_steps,
+                                     max_steps, dt, gamma, box=box)
+
+    pos, vel = jax.lax.fori_loop(0, max_steps + 1, body,
+                                 (state["pos"], state["vel"]))
+    return {"pos": pos, "vel": vel}
+
+
+def stacked_step_noise(rngs, max_steps: int, shape) -> jax.Array:
+    """Pre-draw every step's noise: (S, R) key folds -> (S, R, *shape).
+
+    Same ``fold_in(key_r, t)`` stream the per-replica reference path
+    consumes step by step, drawn as ONE wide op so the step loop carries
+    no RNG thunks.  Deliberate trade: device memory is O(S * R * N)
+    instead of the in-loop draw's O(R * N) — cheap for RE workloads,
+    whose whole premise is short cycles (``md_steps_per_cycle`` tens to
+    hundreds), but worth revisiting if propagate is ever driven with
+    very large ``max_steps`` on large systems."""
+    ts = jnp.arange(max_steps)
+    return jax.vmap(lambda t: jax.vmap(
+        lambda k: jax.random.normal(jax.random.fold_in(k, t), shape))(
+        rngs))(ts)
 
 
 def kinetic_temperature(vel, masses):

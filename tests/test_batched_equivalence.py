@@ -1,0 +1,186 @@
+"""Replica-major batched MD vs the per-replica vmap reference oracle.
+
+Every engine ships two implementations of its hot path: the default
+replica-major batched one (``batched=True`` — stacked gathers, one
+(R, N, N) pairwise pass, one stacked BAOAB update) and the original
+vmap-over-replicas oracle (``batched=False``).  This suite pins the
+batched path to the oracle:
+
+  * propagate / features / energy_pair / cross_energy agree to float
+    tolerance on all three MD engines (both paths fold the SAME
+    per-replica keys, so the noise sequences are identical and the only
+    differences are XLA reduction-order rounding);
+  * full ``run_fused`` trajectories driven by the two paths make
+    BITWISE-identical exchange decisions (assignments, acceptance
+    counters) — the discrete RE trajectory is path-invariant;
+  * the replica-grid Pallas LJ kernels match the batch-agnostic jnp
+    oracle, and the batched custom_vjp is exactly the forces kernel.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import RepExConfig
+from repro.core import REMDDriver, build_grid, ctrl_for_assignment
+from repro.md import HarmonicEngine, LJEngine, MDEngine
+
+ENGINES = {
+    "md": lambda batched: MDEngine(batched=batched),
+    "lj": lambda batched: LJEngine(n_particles=27, batched=batched),
+    "harmonic": lambda batched: HarmonicEngine(batched=batched),
+}
+# TSU grid so the MD engine's umbrella/salt ctrl reductions are exercised
+DIMS = (("temperature", 2), ("umbrella", 2), ("salt", 2))
+
+
+def _setup(name):
+    grid = build_grid(RepExConfig(dimensions=DIMS))
+    n = grid.n_ctrl
+    eng_b = ENGINES[name](True)
+    eng_v = ENGINES[name](False)
+    state = eng_b.init_state(jax.random.key(0), n)
+    keys = getattr(eng_b, "ctrl_keys", None)
+    ctrl = ctrl_for_assignment(grid, jnp.arange(n), keys)
+    return grid, eng_b, eng_v, state, ctrl
+
+
+def _tree_allclose(a, b, rtol=2e-5, atol=1e-4):
+    for ka in a:
+        np.testing.assert_allclose(np.asarray(a[ka]), np.asarray(b[ka]),
+                                   rtol=rtol, atol=atol, err_msg=ka)
+
+
+@pytest.mark.parametrize("name", list(ENGINES))
+def test_propagate_batched_matches_vmap(name):
+    grid, eng_b, eng_v, state, ctrl = _setup(name)
+    n = grid.n_ctrl
+    rngs = jax.random.split(jax.random.key(7), n)
+    # heterogeneous step counts: the masked-lane (async straggler) path
+    n_steps = jnp.asarray([5, 3, 5, 0, 5, 5, 2, 5], jnp.int32)[:n]
+    out_b = eng_b.propagate(state, ctrl, n_steps, rngs, max_steps=5)
+    out_v = eng_v.propagate(state, ctrl, n_steps, rngs, max_steps=5)
+    _tree_allclose(out_b, out_v)
+    # n_steps == 0 lanes must be bitwise untouched on BOTH paths
+    idle = np.asarray(n_steps) == 0
+    if idle.any():
+        for k in out_b:
+            np.testing.assert_array_equal(np.asarray(out_b[k])[idle],
+                                          np.asarray(state[k])[idle])
+
+
+@pytest.mark.parametrize("name", list(ENGINES))
+def test_energy_and_pair_batched_matches_vmap(name):
+    grid, eng_b, eng_v, state, ctrl = _setup(name)
+    n = grid.n_ctrl
+    swapped = jnp.roll(jnp.arange(n), 1)
+    keys = getattr(eng_b, "ctrl_keys", None)
+    ctrl_sw = ctrl_for_assignment(grid, swapped, keys)
+    np.testing.assert_allclose(np.asarray(eng_b.energy(state, ctrl)),
+                               np.asarray(eng_v.energy(state, ctrl)),
+                               rtol=2e-5, atol=1e-3)
+    ua_b, ub_b = eng_b.energy_pair(state, ctrl, ctrl_sw)
+    ua_v, ub_v = eng_v.energy_pair(state, ctrl, ctrl_sw)
+    np.testing.assert_allclose(np.asarray(ua_b), np.asarray(ua_v),
+                               rtol=2e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(ub_b), np.asarray(ub_v),
+                               rtol=2e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("name", list(ENGINES))
+def test_cross_energy_batched_matches_vmap(name):
+    grid, eng_b, eng_v, state, _ = _setup(name)
+    keys = getattr(eng_b, "ctrl_keys", None)
+    values = grid.values if keys is None else {k: grid.values[k]
+                                               for k in keys}
+    x_b = eng_b.cross_energy(state, values)
+    x_v = eng_v.cross_energy(state, values)
+    scale = max(float(jnp.max(jnp.abs(x_v))), 1.0)
+    assert float(jnp.max(jnp.abs(x_b - x_v))) / scale < 1e-5
+
+
+def test_features_batched_matches_vmap():
+    """MDEngine feature decomposition: stacked-gather path vs per-replica."""
+    _, eng_b, eng_v, state, _ = _setup("md")
+    f_b = eng_b.replica_features(state)
+    f_v = eng_v.replica_features(state)
+    assert set(f_b) == set(f_v) == {"u_base", "u_elec", "phi", "psi"}
+    _tree_allclose(f_b, f_v, rtol=2e-5, atol=1e-3)
+
+
+def test_batched_energy_terms_match_per_replica():
+    """The public per-term batched functions vs vmap of the scalar ones."""
+    from repro.md import energy as E
+    eng = MDEngine()
+    sys = eng.system
+    pos = eng.init_state(jax.random.key(5), 4)["pos"]
+    pairs = [
+        (E.batched_bonded_energy(pos, sys),
+         jax.vmap(lambda p: E.bonded_energy(p, sys))(pos)),
+        (E.batched_lj_energy(pos, sys),
+         jax.vmap(lambda p: E.lj_energy(p, sys))(pos)),
+        (E.batched_elec_energy(pos, sys),
+         jax.vmap(lambda p: E.elec_energy(p, sys))(pos)),
+        (E.batched_dihedral_angles(pos, sys.dihedrals),
+         jax.vmap(lambda p: E.dihedral_angles(p, sys.dihedrals))(pos)),
+    ]
+    for got, want in pairs:
+        assert got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("name", list(ENGINES))
+def test_run_fused_exchange_decisions_bitwise_identical(name):
+    """The discrete RE trajectory must not depend on the propagate layout:
+    batched and vmap drivers make the SAME exchange decisions."""
+    dims = DIMS if name == "md" else (("temperature", 6),)
+    cfg = RepExConfig(dimensions=dims, md_steps_per_cycle=3, n_cycles=6)
+    d_b = REMDDriver(ENGINES[name](True), cfg)
+    d_v = REMDDriver(ENGINES[name](False), cfg)
+    ens_b = d_b.run_fused(d_b.init(), chunk_cycles=3)
+    ens_v = d_v.run_fused(d_v.init(), chunk_cycles=3)
+    np.testing.assert_array_equal(np.asarray(ens_b.assignment),
+                                  np.asarray(ens_v.assignment))
+    assert d_b.acceptance == d_v.acceptance
+    for h_b, h_v in zip(d_b.history, d_v.history):
+        for key in ("cycle", "dim", "accept", "attempt", "failed"):
+            assert h_b[key] == h_v[key], key
+
+
+def test_lj_pallas_batched_kernel_vs_ref():
+    """Replica-grid Pallas kernels vs the batch-agnostic jnp oracle."""
+    from repro.kernels.lj_forces import ops as lj_ops
+    from repro.kernels.lj_forces import ref as lj_ref
+    pos = jax.random.uniform(jax.random.key(11), (4, 27, 3)) * 10.0
+    sigma, eps, box = 3.4, 0.238, 12.0
+    e_k = lj_ops.lj_energy_batched(pos, sigma, eps, box, 32)
+    e_r = lj_ref.lj_energy(pos, sigma, eps, box)
+    assert e_k.shape == e_r.shape == (4,)
+    np.testing.assert_allclose(np.asarray(e_k), np.asarray(e_r), rtol=1e-5)
+    f_k = lj_ops.lj_forces_batched(pos, sigma, eps, box, 32)
+    f_r = lj_ref.lj_forces(pos, sigma, eps, box)
+    assert float(jnp.max(jnp.abs(f_k - f_r)
+                         / (jnp.abs(f_r) + 1e-3))) < 1e-3
+    # the custom_vjp of the batched energy IS the batched forces kernel
+    g = jax.grad(lambda p: jnp.sum(
+        lj_ops.lj_energy_batched(p, sigma, eps, box, 32)))(pos)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(-f_k))
+
+
+def test_lj_pallas_engine_batched_propagate():
+    """LJEngine(use_pallas=True) propagates the whole stack through the
+    replica-grid kernel and matches the jnp-oracle engine."""
+    grid = build_grid(RepExConfig(dimensions=(("temperature", 2),)))
+    eng_p = LJEngine(n_particles=27, use_pallas=True, batched=True)
+    eng_r = LJEngine(n_particles=27, use_pallas=False, batched=True)
+    state = eng_p.init_state(jax.random.key(2), 2)
+    ctrl = ctrl_for_assignment(grid, jnp.arange(2), eng_p.ctrl_keys)
+    rngs = jax.random.split(jax.random.key(3), 2)
+    n_steps = jnp.full(2, 2, jnp.int32)
+    out_p = eng_p.propagate(state, ctrl, n_steps, rngs, max_steps=2)
+    out_r = eng_r.propagate(state, ctrl, n_steps, rngs, max_steps=2)
+    _tree_allclose(out_p, out_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(eng_p.energy(out_p, ctrl)),
+        np.asarray(eng_r.energy(out_p, ctrl)), rtol=1e-5)
