@@ -41,6 +41,9 @@ from repro.md.system import chain_molecule
 REPLICA_COUNTS = (8, 16, 32, 64)
 MD_STEPS = 10
 
+# cycle_fusion JSON destination; ``run.py --json-out PATH`` overrides
+JSON_OUT = None
+
 
 def _time(fn, *args, reps=3):
     fn(*args)                                  # compile
@@ -258,22 +261,25 @@ def cycle_fusion(rows: List[str]):
     overhead every cycle) and K=64 (overhead amortized 64x).  Two engines
     bracket the regimes of Eq. (1):
 
-      harmonic      — the overhead probe (T_MD ~ 0): cycle time IS the
-                      overhead, so fusion's full factor shows (the paper's
-                      scaling regime, where dispatch dominates short
-                      cycles);
-      md_chain      — compute-heavy toy MD, replica-major batched
-                      propagate (the default): T_MD is a few wide fused
-                      ops, so fusion + batching pull the row toward the
-                      harmonic floor;
-      md_chain_vmap — the same physics through the per-replica vmap
-                      oracle (``MDEngine(batched=False)``): the PR-1
-                      T_MD-bound baseline, kept to quantify what the
-                      replica-major rewrite bought.
+      harmonic         — the overhead probe (T_MD ~ 0): cycle time IS the
+                         overhead, so fusion's full factor shows (the
+                         paper's scaling regime, where dispatch dominates
+                         short cycles);
+      md_chain (pallas) — the default ``MDEngine()``: analytic-force
+                         propagate (kernels/chain_forces bonded pass +
+                         lj_forces nonbonded pass, no autodiff graph) —
+                         the PR-3 fused force path;
+      md_chain (batched) — the PR-2 autodiff baseline
+                         (``force_path="batched"``): grad of the
+                         replica-major batched potential;
+      md_chain_vmap    — the same physics through the per-replica vmap
+                         oracle (``MDEngine(batched=False)``): the PR-1
+                         T_MD-bound baseline.
 
     The legacy per-cycle ``run()`` is included as the unfused baseline.
-    Results are also emitted to ``BENCH_cycle_fusion.json``.
-    ``CYCLE_FUSION_SMOKE=1`` shrinks the sweep for CI smoke runs.
+    Results are also emitted as JSON (``--json-out PATH``, default
+    ``BENCH_cycle_fusion.json``).  ``CYCLE_FUSION_SMOKE=1`` shrinks the
+    sweep for CI smoke runs.
     """
     import functools
     import json
@@ -299,15 +305,21 @@ def cycle_fusion(rows: List[str]):
 
     engines = {"harmonic": HarmonicEngine}
     if not smoke:
-        engines["md_chain"] = MDEngine
+        engines["md_chain_pallas"] = MDEngine           # the default path
+        engines["md_chain_batched"] = functools.partial(
+            MDEngine, force_path="batched")
         engines["md_chain_vmap"] = functools.partial(MDEngine,
                                                      batched=False)
     payload: Dict[str, Dict] = {"md_steps_per_cycle": MD_STEPS,
                                 "n_replicas": n_replicas,
-                                "n_cycles": n_cycles, "engines": {}}
+                                "n_cycles": n_cycles, "engines": {},
+                                "engines_meta": {}}
     for name, make_engine in engines.items():
         eng = make_engine()
         drv = REMDDriver(eng, cfg)
+        payload["engines_meta"][name] = {
+            k: v for k, v in drv.capabilities.items()
+            if k in ("force_path", "batched")}
         ens = drv.init()
         t_unfused = us_per_cycle(lambda: drv.run(ens, n_cycles=n_cycles))
         rows.append(f"cycle_fusion_{name}_unfused,{t_unfused:.0f},"
@@ -333,7 +345,7 @@ def cycle_fusion(rows: List[str]):
             "speedup_K_max_vs_K1": per_k[chunks[0]] / per_k[k_max],
             "recovered_runtime_overhead_us_per_cycle": recovered,
         }
-    with open("BENCH_cycle_fusion.json", "w") as f:
+    with open(JSON_OUT or "BENCH_cycle_fusion.json", "w") as f:
         json.dump(payload, f, indent=2)
 
 

@@ -2,18 +2,34 @@
 
 Prints ``name,us_per_call,derived`` CSV (see paper_figures for the figure
 catalogue; roofline.py emits the dry-run-derived §Roofline table).
+
+    python benchmarks/run.py [FILTER] [--json-out PATH]
+
+``FILTER`` selects benchmarks by substring; ``--json-out`` redirects the
+JSON payload of benches that emit one (cycle_fusion) — e.g.
+``cycle_fusion --json-out BENCH_force_kernel.json`` records the
+force-kernel sweep.
 """
 from __future__ import annotations
 
-import sys
+import argparse
 
 
 def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("only", nargs="?", default=None,
+                        help="substring filter on benchmark names")
+    parser.add_argument("--json-out", default=None,
+                        help="path for the JSON payload of benches that "
+                             "emit one (default: bench-specific name)")
+    args = parser.parse_args()
+
     from benchmarks import paper_figures as PF
+    if args.json_out:
+        PF.JSON_OUT = args.json_out
     print("name,us_per_call,derived", flush=True)
-    only = sys.argv[1] if len(sys.argv) > 1 else None
     for fn in PF.ALL:
-        if only and only not in fn.__name__:
+        if args.only and args.only not in fn.__name__:
             continue
         rows = []
         try:

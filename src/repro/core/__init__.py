@@ -7,7 +7,7 @@ orchestrates them over any SimulationEngine.
 """
 from repro.core.controls import (ControlGrid, PairTable, build_grid,
                                  ctrl_for_assignment)
-from repro.core.engine import SimulationEngine
+from repro.core.engine import SimulationEngine, engine_capabilities
 from repro.core.ensemble import Ensemble, control_multiset_ok, make_ensemble
 from repro.core.exchange import (matrix_exchange, metropolis,
                                  neighbor_exchange, pair_energies)

@@ -52,15 +52,47 @@ class SimulationEngine(Protocol):
         ...
 
 
-# Optional engine extension (duck-typed, NOT part of the Protocol so that
-# minimal engines stay minimal):
+# Optional engine extensions (duck-typed, NOT part of the Protocol so
+# that minimal engines stay minimal):
 #
 #   def energy_pair(self, state, ctrl_a: Ctrl, ctrl_b: Ctrl)
 #           -> tuple[jax.Array, jax.Array]
+#       The exchange phase evaluates the ensemble under its current AND
+#       its proposed ctrl assignment.  Engines whose energy factors into
+#       ctrl-independent features (the expensive O(N^2) part) times a
+#       cheap ctrl reduction should implement ``energy_pair`` to compute
+#       the features once; ``repro.core.exchange.pair_energies``
+#       dispatches to it when present and falls back to two ``energy``
+#       calls otherwise.
 #
-# The exchange phase evaluates the ensemble under its current AND its
-# proposed ctrl assignment.  Engines whose energy factors into
-# ctrl-independent features (the expensive O(N^2) part) times a cheap
-# ctrl reduction should implement ``energy_pair`` to compute the features
-# once; ``repro.core.exchange.pair_energies`` dispatches to it when
-# present and falls back to two ``energy`` calls otherwise.
+#   ctrl_keys: tuple[str, ...]
+#       The only ctrl fields the engine reads — the driver skips
+#       gathering the rest of the grid each cycle.
+#
+#   force_path: str
+#       Which force implementation the engine's propagate uses
+#       ("pallas" analytic kernels / "batched" autodiff / "vmap"
+#       per-replica oracle for the stock MD engine).  Informational:
+#       surfaced by ``engine_capabilities`` for logs and benchmarks.
+
+
+def engine_capabilities(engine) -> Dict[str, Any]:
+    """Feature-detect the optional extensions of a SimulationEngine.
+
+    Duck-typed (mirrors how the driver and exchange layer actually
+    dispatch), so it works for any object satisfying the protocol.
+    ``REMDDriver`` records the result as ``driver.capabilities``; the
+    benchmark harness prints it so a perf row is attributable to the
+    paths that produced it.
+    """
+    keys = getattr(engine, "ctrl_keys", None)
+    return {
+        "energy_pair": callable(getattr(engine, "energy_pair", None)),
+        "replica_features": callable(
+            getattr(engine, "replica_features", None)),
+        # None = not declared (engine reads every ctrl field); () is a
+        # legitimate declaration of "reads none" and is preserved
+        "ctrl_keys": tuple(keys) if keys is not None else None,
+        "force_path": getattr(engine, "force_path", None),
+        "batched": bool(getattr(engine, "batched", False)),
+    }

@@ -63,7 +63,9 @@ class REMDDriver:
     def __init__(self, engine, cfg: RepExConfig, mesh=None,
                  slots: Optional[int] = None, ckpt_dir: Optional[str] = None,
                  ckpt_every: int = 0, failure_rate: float = 0.0):
+        from repro.core.engine import engine_capabilities
         self.engine = engine
+        self.capabilities = engine_capabilities(engine)
         self.cfg = cfg
         self.mesh = mesh
         self.grid: ControlGrid = build_grid(cfg)

@@ -2,16 +2,52 @@
 
   flash_attention — blockwise-causal online-softmax attention (train/prefill
                     hot spot of the LM engine).
-  lj_forces       — all-pairs Lennard-Jones energy/forces (the MD phase hot
-                    spot; the paper's simulation phase).
+  lj_forces       — all-pairs Lennard-Jones / chain nonbonded energy+forces
+                    (the MD phase hot spot; the paper's simulation phase).
+  chain_forces    — analytic bonded forces (bonds/angles/torsions/umbrella
+                    bias) with hand-derived gradients, one replica-grid
+                    launch — the fused force path of the MD engine.
   exchange_matrix — all-pairs replica x ctrl reduced-energy matrix (the
                     paper's S-REMD 'single point energy' exchange hot spot).
 
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
 ops.py (jit'd wrapper; interpret=True on CPU), ref.py (pure-jnp oracle).
+For the force packages the ref is ALSO the fast CPU path — ops dispatch
+to the jnp oracle off-TPU (interpret mode is a correctness harness, not
+a fast path) and to the compiled kernel on TPU.
 """
 
 
 def default_interpret() -> bool:
     import jax
     return jax.default_backend() != "tpu"
+
+
+def wrap_deg(delta):
+    """Wrap angle differences (degrees) to [-180, 180) — the periodic
+    distance both the umbrella-bias energies and the analytic bias
+    torque use; ONE definition so force and energy stay bit-identical."""
+    import jax.numpy as jnp
+    return jnp.mod(delta + 180.0, 360.0) - 180.0
+
+
+def pad_to_block(n: int, block: int) -> int:
+    """Lane padding shared by the packed-coordinate layouts."""
+    return max(block, ((n + block - 1) // block) * block)
+
+
+def pack_coords(pos, n_pad: int):
+    """(R, N, 3) -> the shared (R, 8, n_pad) packed layout: rows 0..2 =
+    x,y,z, row 3 = validity; rows 4..7 left zero for per-kernel extras."""
+    import jax.numpy as jnp
+    r, n = pos.shape[0], pos.shape[1]
+    c = jnp.zeros((r, 8, n_pad), jnp.float32)
+    c = c.at[:, 0:3, :n].set(jnp.swapaxes(pos, 1, 2).astype(jnp.float32))
+    return c.at[:, 3, :n].set(1.0)
+
+
+def default_use_kernel() -> bool:
+    """Compiled Pallas kernels are the default only where they compile
+    natively; elsewhere ops fall back to the jnp analytic oracle."""
+    import jax
+    return jax.default_backend() == "tpu"

@@ -1,0 +1,21 @@
+"""Analytic bonded-force package: bonds + angles + torsions + umbrella bias
+with hand-derived gradients, as one replica-batched Pallas kernel.
+
+The MD hot loop's force evaluation used to be ``jax.grad`` of the bonded
+energy — a ~60-thunk XLA subgraph re-emitted every BAOAB iteration.  This
+package computes the same forces in closed form:
+
+  kernel.py — one ``pl.pallas_call`` over a (R,) replica grid: ONE one-hot
+              gather matmul pulls every bonded term's atoms out of the
+              coordinate block, VPU geometry produces per-term force
+              vectors, ONE scatter matmul accumulates them back onto
+              atoms (MXU-native gather/scatter — no dynamic indexing).
+  ops.py    — ``build_pack`` (host-side topology packing) +
+              ``bonded_forces`` dispatch (jnp analytic path by default,
+              kernel on TPU / on request).
+  ref.py    — the pure-jnp analytic oracle (also the fast CPU path) and
+              the ``ChainTopology`` container both layers share.
+
+Forces agree with ``jax.grad`` of ``repro.md.energy`` reference energies
+to float tolerance (tests/test_chain_forces.py).
+"""

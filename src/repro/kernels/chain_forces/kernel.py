@@ -1,0 +1,197 @@
+"""Replica-batched bonded-force Pallas kernel.
+
+One program per replica (grid ``(R,)``); coordinates use the packed
+(8, N) layout shared with ``lj_forces`` (rows 0..2 = x,y,z, row 3 =
+validity).  Bonded topology is a DENSE one-hot gather matrix so both the
+gather and the scatter-add are MXU matmuls — TPU-native, no dynamic
+indexing:
+
+    G = C @ P        (8, Np) @ (Np, Tp) -> (8, Tp)   gather
+    F = S @ P^T      (8, Tp) @ (Tp, Np) -> (8, Np)   scatter-add
+
+``P[:, t] `` is the one-hot column of the atom feeding term-slot ``t``;
+slots are laid out role-major ``[bond_i | bond_j | ang_a | ang_b | ang_c
+| quad_0..quad_3]`` with every role segment lane-padded so slicing is
+static.  Per-term parameters ride in (8, ·) arrays (row meanings in
+``ops._pack_params``).  Padded slots carry k = 0 and gather the origin;
+every denominator is guarded so their (zero-weighted) geometry stays
+finite.
+
+All geometry is expressed on (1, T) component rows (x, y, z kept as
+separate sublanes) so the whole body is VPU element-wise work between
+the two matmuls.  The per-replica umbrella bias (centers/k for the two
+feature torsions) enters as an (R, 8) input; ``bias=False`` compiles it
+out entirely (the T-only-ladder constant-fold).
+
+Outputs: forces (R, 8, Np) (rows 0..2) and the bonded energy (R, 1)
+accumulated in the same sweep.  The gradient math is the hand-derived
+set documented in ``ref.py`` — the kernel and the jnp oracle are the
+same formulas in two layouts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.chain_forces.ref import DEG, _wrap_deg
+
+_DN = (((1,), (0,)), ((), ()))     # contract last dim of lhs w/ first of rhs
+_DNT = (((1,), (1,)), ((), ()))    # contract last dims (rhs transposed)
+
+
+def _xyz(g, off, w):
+    blk = g[:, off:off + w]
+    return blk[0:1], blk[1:2], blk[2:3]
+
+
+def _cross(ax, ay, az, bx, by, bz):
+    return (ay * bz - az * by, az * bx - ax * bz, ax * by - ay * bx)
+
+
+def _dot3(ax, ay, az, bx, by, bz):
+    return ax * bx + ay * by + az * bz
+
+
+def _rows3(fx, fy, fz):
+    z = jnp.zeros_like(fx)
+    return jnp.concatenate([fx, fy, fz, z, z, z, z, z], axis=0)
+
+
+def _chain_forces_kernel(c_ref, p_ref, bnd_ref, ang_ref, qud_ref, bias_ref,
+                         f_ref, e_ref, *, bp, ap, qp, bias):
+    c = c_ref[0]                                   # (8, Np)
+    p = p_ref[...]                                 # (Np, Tp)
+    g = jax.lax.dot_general(c, p, _DN, preferred_element_type=jnp.float32)
+
+    # -- bonds ------------------------------------------------------------
+    xi, yi, zi = _xyz(g, 0, bp)
+    xj, yj, zj = _xyz(g, bp, bp)
+    dx, dy, dz = xi - xj + 1e-12, yi - yj + 1e-12, zi - zj + 1e-12
+    r = jnp.sqrt(dx * dx + dy * dy + dz * dz)
+    r0, kb = bnd_ref[0:1, :], bnd_ref[1:2, :]
+    e_bond = jnp.sum(kb * (r - r0) ** 2)
+    cb = 2.0 * kb * (r - r0) / r                   # dE/dd coefficient
+    s_bi = _rows3(-cb * dx, -cb * dy, -cb * dz)    # force = -grad
+    s_bj = _rows3(cb * dx, cb * dy, cb * dz)
+
+    # -- angles -----------------------------------------------------------
+    o = 2 * bp
+    ax_, ay_, az_ = _xyz(g, o, ap)
+    bx_, by_, bz_ = _xyz(g, o + ap, ap)
+    cx_, cy_, cz_ = _xyz(g, o + 2 * ap, ap)
+    v1x, v1y, v1z = ax_ - bx_, ay_ - by_, az_ - bz_
+    v2x, v2y, v2z = cx_ - bx_, cy_ - by_, cz_ - bz_
+    n1 = jnp.sqrt(_dot3(v1x, v1y, v1z, v1x, v1y, v1z))
+    n2 = jnp.sqrt(_dot3(v2x, v2y, v2z, v2x, v2y, v2z))
+    den = n1 * n2 + 1e-9
+    dot = _dot3(v1x, v1y, v1z, v2x, v2y, v2z)
+    cosv = dot / den
+    cc = jnp.clip(cosv, -1 + 1e-6, 1 - 1e-6)
+    theta = jnp.arccos(cc)
+    t0, ka = ang_ref[0:1, :], ang_ref[1:2, :]
+    e_angle = jnp.sum(ka * (theta - t0) ** 2)
+    interior = ((cosv > -1 + 1e-6) & (cosv < 1 - 1e-6)).astype(cosv.dtype)
+    g_c = (2.0 * ka * (theta - t0)
+           * (-1.0 / jnp.sqrt(1.0 - cc * cc)) * interior)
+    w1 = dot * n2 / (den * den * (n1 + 1e-12))
+    w2 = dot * n1 / (den * den * (n2 + 1e-12))
+    gax = g_c * (v2x / den - w1 * v1x)
+    gay = g_c * (v2y / den - w1 * v1y)
+    gaz = g_c * (v2z / den - w1 * v1z)
+    gcx = g_c * (v1x / den - w2 * v2x)
+    gcy = g_c * (v1y / den - w2 * v2y)
+    gcz = g_c * (v1z / den - w2 * v2z)
+    s_aa = _rows3(-gax, -gay, -gaz)
+    s_ab = _rows3(gax + gcx, gay + gcy, gaz + gcz)
+    s_ac = _rows3(-gcx, -gcy, -gcz)
+
+    # -- torsions + umbrella bias ----------------------------------------
+    o = 2 * bp + 3 * ap
+    p0 = _xyz(g, o, qp)
+    p1 = _xyz(g, o + qp, qp)
+    p2 = _xyz(g, o + 2 * qp, qp)
+    p3 = _xyz(g, o + 3 * qp, qp)
+    b0x, b0y, b0z = p1[0] - p0[0], p1[1] - p0[1], p1[2] - p0[2]
+    b1x, b1y, b1z = p2[0] - p1[0], p2[1] - p1[1], p2[2] - p1[2]
+    b2x, b2y, b2z = p3[0] - p2[0], p3[1] - p2[1], p3[2] - p2[2]
+    n1x, n1y, n1z = _cross(b0x, b0y, b0z, b1x, b1y, b1z)
+    n2x, n2y, n2z = _cross(b1x, b1y, b1z, b2x, b2y, b2z)
+    nb1 = jnp.sqrt(_dot3(b1x, b1y, b1z, b1x, b1y, b1z))
+    ib = 1.0 / (nb1 + 1e-9)
+    m1x, m1y, m1z = _cross(n1x, n1y, n1z, b1x * ib, b1y * ib, b1z * ib)
+    x = _dot3(n1x, n1y, n1z, n2x, n2y, n2z)
+    y = _dot3(m1x, m1y, m1z, n2x, n2y, n2z)
+    ang = jnp.arctan2(y, x)
+    nq, kq = qud_ref[0:1, :], qud_ref[1:2, :]
+    ph = qud_ref[2:3, :]
+    e_dih = jnp.sum(kq * (1.0 + jnp.cos(nq * ang - ph)))
+    torque = -kq * nq * jnp.sin(nq * ang - ph)
+    if bias:
+        isphi, ispsi = qud_ref[3:4, :], qud_ref[4:5, :]
+        deg = ang * DEG
+        torque += isphi * (2.0 * bias_ref[0, 2]
+                           * _wrap_deg(deg - bias_ref[0, 0]) * DEG)
+        torque += ispsi * (2.0 * bias_ref[0, 3]
+                           * _wrap_deg(deg - bias_ref[0, 1]) * DEG)
+    inv1 = 1.0 / (_dot3(n1x, n1y, n1z, n1x, n1y, n1z) + 1e-12)
+    inv2 = 1.0 / (_dot3(n2x, n2y, n2z, n2x, n2y, n2z) + 1e-12)
+    invb = 1.0 / (nb1 + 1e-12)
+    c0 = -nb1 * inv1                               # db0 = c0 * n1
+    c2 = -nb1 * inv2                               # db2 = c2 * n2
+    d1a = _dot3(b0x, b0y, b0z, b1x, b1y, b1z) * invb * inv1
+    d1b = _dot3(b2x, b2y, b2z, b1x, b1y, b1z) * invb * inv2
+    # force on quad atom a = -torque * dphi_a; dphi chain through b0,b1,b2
+    tq = -torque
+    f0x, f0y, f0z = tq * -c0 * n1x, tq * -c0 * n1y, tq * -c0 * n1z
+    t1x = tq * (c0 * n1x - (d1a * n1x + d1b * n2x))
+    t1y = tq * (c0 * n1y - (d1a * n1y + d1b * n2y))
+    t1z = tq * (c0 * n1z - (d1a * n1z + d1b * n2z))
+    t2x = tq * ((d1a * n1x + d1b * n2x) - c2 * n2x)
+    t2y = tq * ((d1a * n1y + d1b * n2y) - c2 * n2y)
+    t2z = tq * ((d1a * n1z + d1b * n2z) - c2 * n2z)
+    f3x, f3y, f3z = tq * c2 * n2x, tq * c2 * n2y, tq * c2 * n2z
+    s_q0 = _rows3(f0x, f0y, f0z)
+    s_q1 = _rows3(t1x, t1y, t1z)
+    s_q2 = _rows3(t2x, t2y, t2z)
+    s_q3 = _rows3(f3x, f3y, f3z)
+
+    s = jnp.concatenate([s_bi, s_bj, s_aa, s_ab, s_ac,
+                         s_q0, s_q1, s_q2, s_q3], axis=1)   # (8, Tp)
+    f_ref[...] = jax.lax.dot_general(
+        s, p, _DNT, preferred_element_type=jnp.float32)[None]
+    e_ref[0, 0] = e_bond + e_angle + e_dih
+
+
+def chain_forces_kernel_batched(coords, gmat, bond_par, ang_par, quad_par,
+                                bias_par, *, bp: int, ap: int, qp: int,
+                                bias: bool, interpret: bool = False):
+    """coords (R, 8, Np) packed; gmat (Np, Tp) one-hot; returns
+    (forces (R, 8, Np), e_bonded (R, 1)) from one launch."""
+    r, _, n_pad = coords.shape
+    tp = gmat.shape[1]
+    kern = functools.partial(_chain_forces_kernel, bp=bp, ap=ap, qp=qp,
+                             bias=bias)
+    return pl.pallas_call(
+        kern,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, 8, n_pad), lambda q: (q, 0, 0)),
+            pl.BlockSpec((n_pad, tp), lambda q: (0, 0)),
+            pl.BlockSpec((8, bp), lambda q: (0, 0)),
+            pl.BlockSpec((8, ap), lambda q: (0, 0)),
+            pl.BlockSpec((8, qp), lambda q: (0, 0)),
+            pl.BlockSpec((1, 8), lambda q: (q, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 8, n_pad), lambda q: (q, 0, 0)),
+            pl.BlockSpec((1, 1), lambda q: (q, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, 8, n_pad), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(coords, gmat, bond_par, ang_par, quad_par, bias_par)

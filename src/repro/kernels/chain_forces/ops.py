@@ -1,0 +1,121 @@
+"""Host-side packing + dispatch for the bonded-force kernel.
+
+``build_pack(system)`` converts a molecular system's bonded topology
+into the kernel's dense layout ONCE (one-hot gather matrix, lane-padded
+parameter rows) — engines build it at construction time and close over
+it, so the hot loop carries only array inputs.
+
+``bonded_forces`` is the MD-facing entry point: the jnp analytic oracle
+(`ref.bonded_forces`) by default — on CPU the oracle IS the fast path,
+interpret mode is a correctness harness — and the replica-grid Pallas
+kernel when ``use_kernel`` is set (or on TPU backends via
+``default_use_kernel``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import (default_interpret, default_use_kernel,
+                           pack_coords, pad_to_block)
+from repro.kernels.chain_forces import kernel as K
+from repro.kernels.chain_forces import ref
+
+
+class ChainForcePack(NamedTuple):
+    """Kernel-ready bonded topology (static ints + device arrays)."""
+    n_atoms: int
+    n_pad: int
+    bp: int                   # lane-padded bond slot width
+    ap: int                   # lane-padded angle slot width
+    qp: int                   # lane-padded quad slot width
+    gmat: jax.Array           # (Np, Tp) one-hot gather/scatter matrix
+    bond_par: jax.Array       # (8, bp): rows 0 = r0, 1 = k
+    ang_par: jax.Array        # (8, ap): rows 0 = t0, 1 = k
+    quad_par: jax.Array       # (8, qp): rows 0 = n, 1 = k, 2 = phase,
+                              #          3 = is_phi, 4 = is_psi
+    top: ref.ChainTopology    # plain-array topology for the jnp path
+
+
+def build_pack(system, lane: int = 128) -> ChainForcePack:
+    """Pack a system's bonded topology for the kernel (host-side, once).
+
+    ``system`` is duck-typed (any object with MolecularSystem's bonded
+    attributes).  Padded slots gather atom 0 columns of ZEROS (the
+    one-hot matrix simply has no entry) and carry k = 0 parameters, so
+    they contribute exactly nothing.
+    """
+    top = ref.chain_topology(system)
+    bonds = np.asarray(top.bonds)
+    angles = np.asarray(top.angles)
+    quads = np.asarray(top.quads)
+    nb, na, nq = len(bonds), len(angles), len(quads)
+    bp, ap, qp = (pad_to_block(nb, lane), pad_to_block(na, lane),
+                  pad_to_block(nq, lane))
+    n_pad = pad_to_block(int(system.n_atoms), lane)
+
+    gmat = np.zeros((n_pad, 2 * bp + 3 * ap + 4 * qp), np.float32)
+    offs, roles = 0, []
+    for width, cols in ((bp, bonds.T), (ap, angles.T), (qp, quads.T)):
+        for role in cols:
+            roles.append((offs, role))
+            offs += width
+    for off, role in roles:
+        gmat[role, off + np.arange(len(role))] = 1.0
+
+    def par(width, rows):
+        out = np.zeros((8, width), np.float32)
+        for i, row in enumerate(rows):
+            out[i, : len(row)] = np.asarray(row)
+        return out
+
+    is_phi = np.zeros(nq, np.float32)
+    is_psi = np.zeros(nq, np.float32)
+    is_phi[nq - 2] = 1.0
+    is_psi[nq - 1] = 1.0
+    return ChainForcePack(
+        n_atoms=int(system.n_atoms), n_pad=n_pad, bp=bp, ap=ap, qp=qp,
+        gmat=jnp.asarray(gmat),
+        bond_par=jnp.asarray(par(bp, (top.bond_r0, top.bond_k))),
+        ang_par=jnp.asarray(par(ap, (top.angle_t0, top.angle_k))),
+        quad_par=jnp.asarray(par(qp, (top.quad_n, top.quad_k,
+                                      top.quad_phase, is_phi, is_psi))),
+        top=top,
+    )
+
+
+def _pack_bias(umbrella_center, umbrella_k, n_replicas: int):
+    b = jnp.zeros((n_replicas, 8), jnp.float32)
+    if umbrella_center is None:
+        return b
+    n_u = umbrella_center.shape[-1]
+    b = b.at[:, 0:n_u].set(umbrella_center)
+    b = b.at[:, 2:2 + n_u].set(umbrella_k)
+    return b
+
+
+def bonded_forces(pos, pack: ChainForcePack,
+                  umbrella_center: Optional[jax.Array] = None,
+                  umbrella_k: Optional[jax.Array] = None,
+                  use_kernel: Optional[bool] = None,
+                  interpret: Optional[bool] = None):
+    """(R, N, 3) stack -> (forces (R, N, 3), e_bonded (R,)).
+
+    Analytic bonds + angles + torsions + umbrella bias; jnp oracle by
+    default, Pallas kernel on TPU / when ``use_kernel`` is set."""
+    if use_kernel is None:
+        use_kernel = default_use_kernel()
+    if not use_kernel:
+        return ref.bonded_forces(pos, pack.top, umbrella_center, umbrella_k)
+    interp = default_interpret() if interpret is None else interpret
+    coords = pack_coords(pos, pack.n_pad)
+    bias_par = _pack_bias(umbrella_center, umbrella_k, pos.shape[0])
+    out, e = K.chain_forces_kernel_batched(
+        coords, pack.gmat, pack.bond_par, pack.ang_par, pack.quad_par,
+        bias_par, bp=pack.bp, ap=pack.ap, qp=pack.qp,
+        bias=umbrella_center is not None, interpret=interp)
+    forces = jnp.swapaxes(out[:, 0:3, : pack.n_atoms], 1, 2)
+    return forces.astype(pos.dtype), e[:, 0]

@@ -5,14 +5,19 @@ row 3 = validity mask (padding atoms are masked out), rows 4..7 zero.
 The 8-row major dim matches the f32 sublane tile; N is padded to the
 lane width so (8, BN) blocks are native VMEM tiles.
 
-The canonical kernels are replica-batched with a leading REPLICA grid
-dimension: coords are (R, 8, N) and the grid is (R, nI, nJ) with the
-replica index outermost, j innermost — the (1, 8, BI) force tile for an
-(r, i) block stays resident while j-tiles stream (same revisiting
-pattern as flash attention).  One launch propagates the whole ensemble,
-the replica-major execution the RepEx scalability claim needs from its
-engines.  The single-configuration entry points are R = 1 wrappers.
-The MD hot loop calls forces; energy backs the custom_vjp in ops.
+All kernels are replica-batched with a leading REPLICA grid dimension:
+coords are (R, 8, N) and the grid is (R, nI, nJ) with the replica index
+outermost, j innermost — the (1, 8, BI) force tile for an (r, i) block
+stays resident while j-tiles stream (same revisiting pattern as flash
+attention).  One launch propagates the whole ensemble, the
+replica-major execution the RepEx scalability claim needs from its
+engines; single-configuration callers go through the same kernels with
+R = 1 (the ops layer adds/strips the replica axis).
+
+``nonbonded_kernel_batched`` is the chain-molecule variant: per-atom
+LJ parameters and charges, an exclusion-mask input, and LJ + elec
+forces plus both per-replica energy accumulators from ONE sweep — the
+single-launch replacement for the MD engine's autodiff force subgraph.
 """
 from __future__ import annotations
 
@@ -46,26 +51,9 @@ def _pair_blocks(ci, cj, sigma, box, bi, bj, ii, jj):
     return r2, s6, mask, (dx, dy, dz)
 
 
-def lj_energy_kernel(coords, *, sigma: float, eps: float, box: float,
-                     block: int = 128, interpret: bool = False) -> jax.Array:
-    """coords: (8, N) packed; returns scalar energy.
-
-    Thin wrapper over the replica-batched kernel with R = 1, so the tile
-    math and init/accumulate logic live in exactly one kernel body."""
-    return lj_energy_kernel_batched(coords[None], sigma=sigma, eps=eps,
-                                    box=box, block=block,
-                                    interpret=interpret)[0]
-
-
-def lj_forces_kernel(coords, *, sigma: float, eps: float, box: float,
-                     block: int = 128, interpret: bool = False) -> jax.Array:
-    """coords: (8, N) packed; returns (8, N) with rows 0..2 = forces."""
-    return lj_forces_kernel_batched(coords[None], sigma=sigma, eps=eps,
-                                    box=box, block=block,
-                                    interpret=interpret)[0]
-
-
 # -- replica-batched kernels (leading replica grid dimension) --------------
+# (single-configuration callers index replica 0 of an R = 1 launch; the
+# former thin wrappers are gone so every call site shares one kernel body)
 
 
 def _energy_kernel_batched(ci_ref, cj_ref, o_ref, *, sigma, eps, box,
@@ -144,3 +132,82 @@ def lj_forces_kernel_batched(coords, *, sigma: float, eps: float,
         out_shape=jax.ShapeDtypeStruct((r, 8, n), jnp.float32),
         interpret=interpret,
     )(coords, coords)
+
+
+# -- chain nonbonded: LJ + electrostatics, forces + energies, one sweep ----
+#
+# Same tiled revisiting pattern as the fluid kernels, extended for the
+# chain engine: per-atom sigma / sqrt(eps) / charge ride in coordinate
+# rows 4..6, the exclusion mask (diagonal + 1-2/1-3 + padding) streams as
+# its own (BI, BJ) tile, and every (r, i, j) tile emits the LJ force, the
+# UNscaled electrostatic force (rows 3..5 — the salt ctrl applies
+# outside the kernel, keeping it ctrl-independent) and both per-replica
+# energy accumulators.  One launch replaces the separate
+# energy-forward + force-backward passes of the autodiff path.
+
+
+def _nonbonded_kernel_batched(ci_ref, cj_ref, m_ref, f_ref, elj_ref,
+                              eel_ref, *, coulomb):
+    ii = pl.program_id(1)
+    jj = pl.program_id(2)
+
+    @pl.when(jj == 0)
+    def _init_f():
+        f_ref[...] = jnp.zeros_like(f_ref)
+
+    @pl.when((ii == 0) & (jj == 0))
+    def _init_e():
+        elj_ref[...] = jnp.zeros_like(elj_ref)
+        eel_ref[...] = jnp.zeros_like(eel_ref)
+
+    ci, cj = ci_ref[0], cj_ref[0]
+    xi, yi, zi = ci[0], ci[1], ci[2]
+    xj, yj, zj = cj[0], cj[1], cj[2]
+    dx = xi[:, None] - xj[None, :]
+    dy = yi[:, None] - yj[None, :]
+    dz = zi[:, None] - zj[None, :]
+    mask = m_ref[...]
+    # masked pairs (diagonal, exclusions, padding) never see r2 -> 0
+    r2 = dx * dx + dy * dy + dz * dz + (1.0 - mask)
+    sig = 0.5 * (ci[4][:, None] + cj[4][None, :])
+    eps = ci[5][:, None] * cj[5][None, :]          # rows carry sqrt(eps)
+    qq = ci[6][:, None] * cj[6][None, :]
+    s6 = (sig * sig / r2) ** 3
+    r = jnp.sqrt(r2)
+    elj_ref[0, 0] += 0.5 * jnp.sum(4.0 * eps * (s6 * s6 - s6) * mask)
+    eel_ref[0, 0] += 0.5 * jnp.sum(coulomb * qq / r * mask)
+    c_lj = 24.0 * eps * (2.0 * s6 * s6 - s6) / r2 * mask
+    c_el = coulomb * qq / (r2 * r) * mask
+    zero = jnp.zeros_like(xi)
+    f_ref[...] += jnp.stack(
+        [jnp.sum(c_lj * dx, axis=1), jnp.sum(c_lj * dy, axis=1),
+         jnp.sum(c_lj * dz, axis=1), jnp.sum(c_el * dx, axis=1),
+         jnp.sum(c_el * dy, axis=1), jnp.sum(c_el * dz, axis=1),
+         zero, zero])[None]
+
+
+def nonbonded_kernel_batched(coords, nb_mask, *, coulomb: float,
+                             block: int = 128, interpret: bool = False):
+    """coords (R, 8, N) packed (rows 0..2 xyz, 3 validity, 4 sigma,
+    5 sqrt(eps), 6 charge); nb_mask (N, N).  Returns
+    (forces (R, 8, N): rows 0..2 = LJ, 3..5 = elec;
+     e_lj (R, 1); e_el (R, 1)) from one launch."""
+    r, _, n = coords.shape
+    block = min(block, n)
+    assert n % block == 0
+    nb = n // block
+    kern = functools.partial(_nonbonded_kernel_batched, coulomb=coulomb)
+    return pl.pallas_call(
+        kern,
+        grid=(r, nb, nb),
+        in_specs=[pl.BlockSpec((1, 8, block), lambda q, i, j: (q, 0, i)),
+                  pl.BlockSpec((1, 8, block), lambda q, i, j: (q, 0, j)),
+                  pl.BlockSpec((block, block), lambda q, i, j: (i, j))],
+        out_specs=[pl.BlockSpec((1, 8, block), lambda q, i, j: (q, 0, i)),
+                   pl.BlockSpec((1, 1), lambda q, i, j: (q, 0)),
+                   pl.BlockSpec((1, 1), lambda q, i, j: (q, 0))],
+        out_shape=[jax.ShapeDtypeStruct((r, 8, n), jnp.float32),
+                   jax.ShapeDtypeStruct((r, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((r, 1), jnp.float32)],
+        interpret=interpret,
+    )(coords, coords, nb_mask)

@@ -8,6 +8,11 @@ through the kernel.
 variants: (R, N, 3) stacks packed to (R, 8, N') and dispatched through
 the replica-grid kernels, energy again carrying a custom_vjp whose
 backward is the batched forces kernel.
+
+``nonbonded`` is the chain-molecule pass (per-atom LJ params, charges,
+exclusion mask): LJ + electrostatic forces AND both energy accumulators
+from one sweep, dispatching between the jnp analytic oracle (default
+off-TPU — it is the fast CPU path) and the Pallas kernel.
 """
 from __future__ import annotations
 
@@ -17,17 +22,15 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import default_interpret
+from repro.kernels import (default_interpret, default_use_kernel,
+                           pack_coords, pad_to_block)
 from repro.kernels.lj_forces import kernel as K
 from repro.kernels.lj_forces import ref
 
 
 def _pack(pos, block: int):
     n = pos.shape[0]
-    n_pad = max(block, ((n + block - 1) // block) * block)
-    c = jnp.zeros((8, n_pad), jnp.float32)
-    c = c.at[0:3, :n].set(pos.T.astype(jnp.float32))
-    c = c.at[3, :n].set(1.0)      # validity row
+    c = pack_coords(pos[None], pad_to_block(n, block))[0]
     return c, n
 
 
@@ -36,8 +39,9 @@ def lj_energy(pos, sigma: float, eps: float, box: float, block: int = 128,
               interpret: Optional[bool] = None):
     interp = default_interpret() if interpret is None else interpret
     c, n = _pack(pos, block)
-    return K.lj_energy_kernel(c, sigma=sigma, eps=eps, box=box, block=block,
-                              interpret=interp)
+    return K.lj_energy_kernel_batched(c[None], sigma=sigma, eps=eps,
+                                      box=box, block=block,
+                                      interpret=interp)[0]
 
 
 def _fwd(pos, sigma, eps, box, block, interpret):
@@ -56,8 +60,8 @@ def lj_forces(pos, sigma: float, eps: float, box: float, block: int = 128,
               interpret: Optional[bool] = None):
     interp = default_interpret() if interpret is None else interpret
     c, n = _pack(pos, block)
-    out = K.lj_forces_kernel(c, sigma=sigma, eps=eps, box=box, block=block,
-                             interpret=interp)
+    out = K.lj_forces_kernel_batched(c[None], sigma=sigma, eps=eps, box=box,
+                                     block=block, interpret=interp)[0]
     return out[0:3, :n].T
 
 
@@ -65,12 +69,8 @@ def lj_forces(pos, sigma: float, eps: float, box: float, block: int = 128,
 
 
 def _pack_batched(pos, block: int):
-    r, n = pos.shape[0], pos.shape[1]
-    n_pad = max(block, ((n + block - 1) // block) * block)
-    c = jnp.zeros((r, 8, n_pad), jnp.float32)
-    c = c.at[:, 0:3, :n].set(jnp.swapaxes(pos, 1, 2).astype(jnp.float32))
-    c = c.at[:, 3, :n].set(1.0)   # validity row
-    return c, n
+    n = pos.shape[1]
+    return pack_coords(pos, pad_to_block(n, block)), n
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
@@ -103,3 +103,63 @@ def lj_forces_batched(pos, sigma: float, eps: float, box: float,
     out = K.lj_forces_kernel_batched(c, sigma=sigma, eps=eps, box=box,
                                      block=block, interpret=interp)
     return jnp.swapaxes(out[:, 0:3, :n], 1, 2)
+
+
+# -- chain nonbonded (per-atom params + exclusion mask, LJ + elec) ---------
+
+
+def _pack_nonbonded(pos, lj_sigma, lj_eps, charges, block: int):
+    n = pos.shape[1]
+    n_pad = pad_to_block(n, block)
+    c = pack_coords(pos, n_pad)
+    c = c.at[:, 4, :n].set(lj_sigma)
+    c = c.at[:, 5, :n].set(jnp.sqrt(lj_eps))
+    c = c.at[:, 6, :n].set(charges)
+    return c, n, n_pad
+
+
+def nonbonded_batched(pos, lj_sigma, lj_eps, charges, nb_mask,
+                      block: int = 128, interpret: Optional[bool] = None):
+    """(R, N, 3) stack through the chain nonbonded kernel: one launch ->
+    (f_lj (R, N, 3), f_el (R, N, 3), e_lj (R,), e_el (R,))."""
+    interp = default_interpret() if interpret is None else interpret
+    c, n, n_pad = _pack_nonbonded(pos, lj_sigma, lj_eps, charges, block)
+    mask = jnp.zeros((n_pad, n_pad), jnp.float32).at[:n, :n].set(nb_mask)
+    out, e_lj, e_el = K.nonbonded_kernel_batched(
+        c, mask, coulomb=ref.COULOMB, block=block, interpret=interp)
+    f_lj = jnp.swapaxes(out[:, 0:3, :n], 1, 2).astype(pos.dtype)
+    f_el = jnp.swapaxes(out[:, 3:6, :n], 1, 2).astype(pos.dtype)
+    return f_lj, f_el, e_lj[:, 0], e_el[:, 0]
+
+
+def nonbonded(pos, lj_sigma, lj_eps, charges, nb_mask,
+              use_kernel: Optional[bool] = None, block: int = 128,
+              interpret: Optional[bool] = None):
+    """Dispatching entry point for the chain nonbonded pass: the jnp
+    analytic oracle by default (the fast CPU path — interpret mode is a
+    correctness harness), the Pallas kernel on TPU / on request."""
+    if use_kernel is None:
+        use_kernel = default_use_kernel()
+    if not use_kernel:
+        return ref.nonbonded(pos, lj_sigma, lj_eps, charges, nb_mask)
+    return nonbonded_batched(pos, lj_sigma, lj_eps, charges, nb_mask,
+                             block=block, interpret=interpret)
+
+
+def nonbonded_force(pos, lj_sigma, lj_eps, charges, nb_mask,
+                    salt_scale=None, use_kernel: Optional[bool] = None,
+                    block: int = 128, interpret: Optional[bool] = None):
+    """Combined (salt-folded) nonbonded force for the propagate loop:
+    (R, N, 3) -> (R, N, 3).  The kernel path combines the sweep's split
+    outputs; the jnp path folds the scaling into one coefficient pass."""
+    if use_kernel is None:
+        use_kernel = default_use_kernel()
+    if not use_kernel:
+        return ref.nonbonded_force(pos, lj_sigma, lj_eps, charges, nb_mask,
+                                   salt_scale)
+    f_lj, f_el, _, _ = nonbonded_batched(pos, lj_sigma, lj_eps, charges,
+                                         nb_mask, block=block,
+                                         interpret=interpret)
+    if salt_scale is not None:
+        f_el = salt_scale[..., None, None] * f_el
+    return f_lj + f_el

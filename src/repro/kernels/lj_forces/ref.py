@@ -1,13 +1,21 @@
-"""Pure-jnp oracle: all-pairs Lennard-Jones energy/forces, minimum image.
+"""Pure-jnp oracle: all-pairs Lennard-Jones energy/forces, minimum image —
+plus the chain-molecule ``nonbonded`` pass (per-atom LJ parameters,
+charges, exclusion mask; LJ AND electrostatic forces with both energy
+accumulators from one pairwise sweep).
 
 Batch-agnostic: ``pos`` may be a single configuration (N, 3) or a replica
 stack (..., N, 3); energies reduce over the trailing pair axes only, so
 the replica-major engines call the SAME oracle the kernel tests use.
+The analytic force expressions here are also the fast CPU path of the
+``force_path="pallas"`` engines (no autodiff graph; the ops layer
+dispatches to the Pallas kernels only on TPU / on request).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+COULOMB = 332.0637   # kcal mol^-1 Angstrom e^-2
 
 
 def _pair_terms(pos, sigma: float, box: float):
@@ -32,3 +40,71 @@ def lj_forces(pos, sigma: float, eps: float, box: float) -> jax.Array:
     disp, r2, s6, mask = _pair_terms(pos, sigma, box)
     coef = 24.0 * eps * (2.0 * s6 * s6 - s6) / r2 * mask
     return jnp.sum(coef[..., None] * disp, axis=-2)
+
+
+def _coef_force(coef, pos):
+    """F_i = sum_j coef_ij (x_i - x_j) WITHOUT materializing the
+    (..., N, N, 3) displacement stack:
+
+        F = rowsum(coef) * x - coef @ x
+
+    one (..., N, N) x (..., N, 3) batched GEMM + elementwise — the
+    identity that keeps the pairwise force a rank-3 computation."""
+    return (jnp.sum(coef, axis=-1)[..., None] * pos
+            - jnp.einsum("...ij,...jc->...ic", coef, pos))
+
+
+def _nonbonded_coefs(pos, lj_sigma, lj_eps, charges, nb_mask):
+    # component-split r2 (dx^2 + dy^2 + dz^2 on (..., N, N) planes): a
+    # sum over a trailing 3-axis would materialize the rank-4
+    # displacement stack and end the fusion at a reduce; this form keeps
+    # the whole coefficient pass one element-wise graph
+    n = pos.shape[-2]
+    x, y, z = pos[..., 0], pos[..., 1], pos[..., 2]
+    dx = x[..., :, None] - x[..., None, :]
+    dy = y[..., :, None] - y[..., None, :]
+    dz = z[..., :, None] - z[..., None, :]
+    r2 = dx * dx + dy * dy + dz * dz + jnp.eye(n)   # guard the diagonal
+    sig = 0.5 * (lj_sigma[:, None] + lj_sigma[None, :])
+    eps = jnp.sqrt(lj_eps[:, None] * lj_eps[None, :])
+    s6 = (sig * sig / r2) ** 3
+    r = jnp.sqrt(r2)
+    qq = charges[:, None] * charges[None, :]
+    c_lj = 24.0 * eps * (2.0 * s6 * s6 - s6) / r2 * nb_mask
+    c_el = COULOMB * qq / (r2 * r) * nb_mask
+    e_lj = 0.5 * jnp.sum(4.0 * eps * (s6 * s6 - s6) * nb_mask,
+                         axis=(-2, -1))
+    e_el = 0.5 * jnp.sum(COULOMB * qq / r * nb_mask, axis=(-2, -1))
+    return c_lj, c_el, e_lj, e_el
+
+
+def nonbonded(pos, lj_sigma, lj_eps, charges, nb_mask):
+    """Chain-molecule nonbonded pass: LJ + bare electrostatics in ONE
+    pairwise sweep, forces AND energies.
+
+    pos (..., N, 3); lj_sigma/lj_eps/charges (N,) per-atom
+    (Lorentz-Berthelot mixing); nb_mask (N, N) with 0 on the diagonal
+    and excluded (1-2/1-3) pairs.  Returns
+    ``(f_lj (..., N, 3), f_el (..., N, 3), e_lj (...,), e_el (...,))``
+    with the electrostatic pieces UNscaled — the salt ctrl applies
+    outside.  Same math as ``repro.md.energy``'s pairwise term and its
+    analytic custom_vjp backward, computed directly (no energy-graph
+    forward pass to re-materialize).
+    """
+    c_lj, c_el, e_lj, e_el = _nonbonded_coefs(pos, lj_sigma, lj_eps,
+                                              charges, nb_mask)
+    return _coef_force(c_lj, pos), _coef_force(c_el, pos), e_lj, e_el
+
+
+def nonbonded_force(pos, lj_sigma, lj_eps, charges, nb_mask,
+                    salt_scale=None):
+    """The propagate-loop variant: ONE combined nonbonded force.
+
+    Folds the per-replica salt scaling (``salt_scale`` (...,) or None)
+    into the pair coefficients so LJ + elec cost a single coefficient
+    pass and a single GEMM — the energies are never formed."""
+    c_lj, c_el, _, _ = _nonbonded_coefs(pos, lj_sigma, lj_eps, charges,
+                                        nb_mask)
+    if salt_scale is not None:
+        c_el = salt_scale[..., None, None] * c_el
+    return _coef_force(c_lj + c_el, pos)

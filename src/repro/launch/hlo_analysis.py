@@ -1,4 +1,6 @@
-"""Trip-count-aware HLO cost extraction for the roofline.
+"""Trip-count-aware HLO cost extraction for the roofline — plus the
+static thunk/op-count probe (``count_ops`` / ``compiled_op_count``) the
+force-kernel regression tests pin against.
 
 ``compiled.cost_analysis()`` counts a while-loop body ONCE, so a scanned
 88-layer model under-reports FLOPs by ~88x.  This module re-derives the
@@ -222,3 +224,57 @@ class HloCostModel:
 
 def analyze(hlo_text: str) -> Dict[str, float]:
     return HloCostModel(hlo_text).totals()
+
+
+# ---------------------------------------------------------------------------
+# Static op census (thunk-creep regression probe)
+# ---------------------------------------------------------------------------
+#
+# The cycle-fusion floor analysis showed that once dispatch overhead is
+# amortized, CPU/TPU cycle time tracks the number of EXECUTABLE ops in
+# the compiled module (XLA-CPU emits one thunk per non-fused op; a
+# fusion computation counts once).  ``count_ops`` is a *static* census —
+# it does NOT weight by while-loop trip counts, because the thunk list
+# is built per compiled op, not per iteration — so it is the right
+# regression metric for "did this refactor silently re-expand the force
+# subgraph".
+
+_TRIVIAL_OPS = frozenset((
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all",
+))
+
+
+def count_ops(hlo_text: str) -> Dict[str, int]:
+    """Per-op-name census of executable ops in a compiled HLO module.
+
+    Counts every op in reachable, non-fusion-internal computations
+    (fusion bodies are free — the fusion op itself is the single thunk)
+    and skips bookkeeping ops that never become thunks."""
+    model = HloCostModel(hlo_text)
+    counts: Dict[str, int] = defaultdict(int)
+    for comp, lines in model.computations.items():
+        if model.mult.get(comp, 0.0) == 0.0 or comp in model.fused:
+            continue
+        for line in lines:
+            d = _DEF_LINE.match(line)
+            if not d:
+                continue
+            _, remainder = _split_shape_op(_COMMENT.sub("", d.group(2)))
+            mop = _OP_NAME.search(remainder)
+            if not mop or mop.group(1) in _TRIVIAL_OPS:
+                continue
+            counts[mop.group(1)] += 1
+    return dict(counts)
+
+
+def compiled_op_count(fn, *args) -> Tuple[int, Dict[str, int]]:
+    """Jit-compile ``fn(*args)`` and return (total, per-op census).
+
+    The total is the pinned quantity in the op-budget regression tests:
+    it moves when (and only when) the compiled program gains or loses
+    executable ops."""
+    import jax
+    text = jax.jit(fn).lower(*args).compile().as_text()
+    census = count_ops(text)
+    return sum(census.values()), census

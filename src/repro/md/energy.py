@@ -20,7 +20,16 @@ Two implementations of every term:
   * replica-major batched functions (``batched_features``,
     ``batched_bonded_energy``, ...) operating on the full (R, N, 3) stack
     with stacked gathers and one (R, N, N) pairwise pass — the default
-    hot path (see the "Replica-major batched path" section below).
+    energy/feature hot path (see the "Replica-major batched path"
+    section below).
+
+FORCES are no longer derived from this module by default: the propagate
+loop's ``force_path="pallas"`` evaluates analytic gradients in
+``repro.kernels.chain_forces`` (bonded + umbrella bias) and
+``repro.kernels.lj_forces`` (nonbonded), with ``jax.grad`` of the
+functions here surviving as the ``force_path="batched"`` tolerance
+oracle (tests/test_chain_forces.py pins the analytic forms to these
+energies).
 """
 from __future__ import annotations
 
@@ -29,9 +38,9 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import wrap_deg as _wrap_deg
+from repro.kernels.lj_forces.ref import COULOMB  # noqa: F401 — canonical
 from repro.md.system import MolecularSystem
-
-COULOMB = 332.0637   # kcal mol^-1 Angstrom e^-2
 
 
 def _dihedral_angle(pos, quad) -> jax.Array:
@@ -102,10 +111,6 @@ def features(pos, sys: MolecularSystem) -> Dict[str, jax.Array]:
         "phi": phi,
         "psi": psi,
     }
-
-
-def _wrap_deg(delta):
-    return jnp.mod(delta + 180.0, 360.0) - 180.0
 
 
 def bias_energy(phi, psi, ctrl_center, ctrl_k) -> jax.Array:
@@ -219,12 +224,19 @@ def _batched_bonded_terms(pos, sys: MolecularSystem
 
 
 def _pair_blocks(pos, lj_sigma, lj_eps):
-    disp = pos[:, :, None, :] - pos[:, None, :, :]
-    r2 = jnp.sum(disp * disp, -1) + jnp.eye(pos.shape[1])
+    """Component-split pairwise blocks: computing r2 as dx^2 + dy^2 +
+    dz^2 on (R, N, N) planes (instead of a trailing-axis reduce over a
+    rank-4 displacement stack) keeps the whole coefficient pass one
+    element-wise XLA fusion — the (R, N, N, 3) tensor is never formed."""
+    x, y, z = pos[..., 0], pos[..., 1], pos[..., 2]
+    dx = x[..., :, None] - x[..., None, :]
+    dy = y[..., :, None] - y[..., None, :]
+    dz = z[..., :, None] - z[..., None, :]
+    r2 = dx * dx + dy * dy + dz * dz + jnp.eye(pos.shape[1])
     sig = 0.5 * (lj_sigma[:, None] + lj_sigma[None, :])
     eps = jnp.sqrt(lj_eps[:, None] * lj_eps[None, :])
     s6 = (sig * sig / r2) ** 3
-    return disp, r2, eps, s6
+    return r2, eps, s6
 
 
 @jax.custom_vjp
@@ -235,7 +247,7 @@ def _pair_energies(pos, lj_sigma, lj_eps, charges, nb_mask):
     loop treats them as constants.  Do not differentiate this helper
     w.r.t. parameters (e.g. for force-field fitting); use the autodiff
     oracle path (``lj_energy``/``elec_energy`` under vmap) instead."""
-    _, r2, eps, s6 = _pair_blocks(pos, lj_sigma, lj_eps)
+    r2, eps, s6 = _pair_blocks(pos, lj_sigma, lj_eps)
     e_lj = 0.5 * jnp.sum(4.0 * eps * (s6 * s6 - s6) * nb_mask,
                          axis=(-2, -1))
     qq = charges[:, None] * charges[None, :]
@@ -259,15 +271,24 @@ def _pair_energies_bwd(res, g):
 
         d(e_lj)/dx_i = -sum_j 24 eps (2 s6^2 - s6) / r2 * disp_ij
         d(e_el)/dx_i = -sum_j C q_i q_j / r^3 * disp_ij
+
+    The coefficient-times-displacement sum is evaluated as
+
+        sum_j coef_ij (x_i - x_j) = rowsum(coef) * x - coef @ x
+
+    — one (R, N, N) x (R, N, 3) batched GEMM, never materializing the
+    (R, N, N, 3) displacement stack (same identity the analytic
+    nonbonded force pass in ``kernels/lj_forces`` uses).
     """
     pos, lj_sigma, lj_eps, charges, nb_mask = res
     g_lj, g_el = g
-    disp, r2, eps, s6 = _pair_blocks(pos, lj_sigma, lj_eps)
+    r2, eps, s6 = _pair_blocks(pos, lj_sigma, lj_eps)
     qq = charges[:, None] * charges[None, :]
     coef = (g_lj[:, None, None] * 24.0 * eps * (2.0 * s6 * s6 - s6) / r2
             + g_el[:, None, None] * COULOMB * qq
             / (r2 * jnp.sqrt(r2))) * nb_mask
-    d_pos = -jnp.sum(coef[..., None] * disp, axis=2)
+    d_pos = -(jnp.sum(coef, axis=-1)[..., None] * pos
+              - jnp.einsum("...ij,...jc->...ic", coef, pos))
     zeros = jax.tree.map(jnp.zeros_like, (lj_sigma, lj_eps, charges,
                                           nb_mask))
     return (d_pos,) + zeros

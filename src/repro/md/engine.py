@@ -14,27 +14,35 @@
                      paper's Eq. (1) — the regime its scaling analysis
                      (and our cycle-fusion benchmark) targets.
 
-Every engine has two propagate/energy implementations selected by the
-``batched`` constructor flag:
+``MDEngine`` selects its force evaluation via ``force_path``:
 
-  batched=True (default) — REPLICA-MAJOR: the replica axis is the leading
-      axis of a few wide fused ops (stacked gathers, one (R, N, N)
-      pairwise pass, one stacked BAOAB update).  Per-step op count is
-      independent of R, which is what lets the md_chain row of the
-      cycle-fusion benchmark approach the harmonic (pure-overhead) row.
-  batched=False — the per-replica reference oracle: ``jax.vmap`` over
-      scalar-sized single-replica programs.  Kept verbatim from before
-      the replica-major rewrite; the equivalence suite
-      (tests/test_batched_equivalence.py) pins the batched path to it.
+  "pallas" (default) — ANALYTIC forces: hand-derived gradients through
+      the ``kernels.chain_forces`` bonded pass (bonds + angles +
+      torsions + umbrella bias) and the ``kernels.lj_forces`` chain
+      nonbonded pass (LJ + electrostatics, one sweep).  No autodiff
+      graph: one propagate step issues ~2 fused passes instead of the
+      ~60-thunk grad-of-energy subgraph.  On TPU the passes are the
+      Pallas replica-grid kernels; off-TPU they are the jnp analytic
+      oracles (the fast CPU path — interpret mode is a correctness
+      harness, not a fast path).
+  "batched" — the PR-2 autodiff path: ``jax.grad`` of the replica-major
+      batched potential (analytic custom_vjp pairwise backward).  The
+      tolerance oracle for the analytic path.
+  "vmap" — the per-replica reference oracle: ``jax.vmap`` over
+      scalar-sized single-replica programs (== ``batched=False``).  The
+      bitwise-exchange-decision oracle.
 
-Both paths run a masked ``fori_loop`` over ``max_steps`` so per-replica
-step counts (async pattern) compile to one program, and both fold the
-SAME per-replica keys, so trajectories agree to float tolerance and
-exchange decisions bit-for-bit.  HarmonicEngine closes the step loop
-analytically either way.
+``batched`` still selects the energy/feature layout (replica-major
+stacked gathers vs vmap-of-scalar programs); ``batched=False`` forces
+``force_path="vmap"``.  All paths run a masked ``fori_loop`` over
+``max_steps`` so per-replica step counts (async pattern) compile to one
+program, and all fold the SAME per-replica keys, so trajectories agree
+to float tolerance and exchange decisions bit-for-bit (pinned by
+tests/test_batched_equivalence.py).  HarmonicEngine closes the step
+loop analytically either way.
 
-See docs/ENGINES.md for the full protocol contract and a worked custom
-engine.
+See docs/ENGINES.md for the full protocol contract, the force-path
+selection table, and a worked custom engine.
 """
 from __future__ import annotations
 
@@ -45,9 +53,14 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels import default_use_kernel
+from repro.kernels.chain_forces import ops as chain_ops
+from repro.kernels.lj_forces import ops as nb_ops
 from repro.md import energy as E
 from repro.md import integrators as I
 from repro.md.system import MolecularSystem, chain_molecule, initial_positions
+
+FORCE_PATHS = ("pallas", "batched", "vmap")
 
 
 def _any_nonfinite(state) -> jax.Array:
@@ -61,12 +74,37 @@ def _any_nonfinite(state) -> jax.Array:
 class MDEngine:
     def __init__(self, system: Optional[MolecularSystem] = None,
                  dt: float = 5e-4, gamma: float = 5.0,
-                 init_temperature: float = 300.0, batched: bool = True):
+                 init_temperature: float = 300.0, batched: bool = True,
+                 force_path: Optional[str] = None,
+                 use_force_kernels: Optional[bool] = None):
+        """``force_path``: "pallas" (analytic, default), "batched"
+        (autodiff of the replica-major potential) or "vmap" (per-replica
+        oracle).  ``batched=False`` implies "vmap" — requesting any
+        other path with ``batched=False`` is a conflict and raises.
+        ``use_force_kernels`` forces the Pallas kernels on/off for the
+        analytic path (default: on only on TPU backends; off-TPU the
+        analytic jnp oracle runs)."""
         self.system = system or chain_molecule()
         self.dt = dt
         self.gamma = gamma
         self.init_temperature = init_temperature
         self.batched = batched
+        if not batched:
+            if force_path not in (None, "vmap"):
+                raise ValueError(
+                    f"batched=False is the vmap oracle; it cannot run "
+                    f"force_path={force_path!r}")
+            force_path = "vmap"
+        elif force_path is None:
+            force_path = "pallas"
+        if force_path not in FORCE_PATHS:
+            raise ValueError(f"force_path must be one of {FORCE_PATHS}, "
+                             f"got {force_path!r}")
+        self.force_path = force_path
+        self._use_kernel = (default_use_kernel() if use_force_kernels is None
+                            else use_force_kernels)
+        self._pack = (chain_ops.build_pack(self.system)
+                      if force_path == "pallas" else None)
 
     # -- protocol ----------------------------------------------------------
 
@@ -86,20 +124,42 @@ class MDEngine:
     def propagate(self, state, ctrl, n_steps, rngs, max_steps: int = 0):
         """``rngs``: per-replica key array (R,) — mode-invariant."""
         max_steps = max_steps or int(jnp.max(n_steps))
-        if not self.batched:
+        if self.force_path == "vmap":
             return self._propagate_vmap(state, ctrl, n_steps, rngs,
                                         max_steps)
         sys = self.system
-        dt, gamma = self.dt, self.gamma
-        temp = ctrl["temperature"]
-        # Replicas are independent, so the gradient of the replica-summed
-        # batched potential is the stacked per-replica force field — one
-        # wide backward pass instead of R small ones.
-        force_fn = jax.grad(
-            lambda p: -jnp.sum(E.batched_potential_energy(p, sys, ctrl)))
-        return I.propagate_replica_major(state, force_fn, sys.masses, temp,
-                                         n_steps, rngs, max_steps, dt,
-                                         gamma)
+        if self.force_path == "batched":
+            # Replicas are independent, so the gradient of the
+            # replica-summed batched potential is the stacked per-replica
+            # force field — one wide backward pass instead of R small ones.
+            force_fn = jax.grad(
+                lambda p: -jnp.sum(E.batched_potential_energy(p, sys, ctrl)))
+        else:
+            force_fn = self._analytic_force_fn(ctrl)
+        return I.propagate_replica_major(state, force_fn, sys.masses,
+                                         ctrl["temperature"], n_steps, rngs,
+                                         max_steps, self.dt, self.gamma)
+
+    def _analytic_force_fn(self, ctrl):
+        """The fused analytic force field: one bonded pass + one
+        nonbonded pass, hand-derived gradients — no autodiff graph.
+        Ctrl terms the grid does not carry (T-only ladders) constant-fold
+        out, exactly like the batched energy path."""
+        sys = self.system
+        u_c = ctrl.get("umbrella_center")
+        u_k = ctrl.get("umbrella_k")
+        salt = ctrl.get("salt")
+
+        salt_scale = None if salt is None else 1.0 - 0.5 * salt
+
+        def force_fn(pos):
+            f, _ = chain_ops.bonded_forces(pos, self._pack, u_c, u_k,
+                                           use_kernel=self._use_kernel)
+            return f + nb_ops.nonbonded_force(
+                pos, sys.lj_sigma, sys.lj_eps, sys.charges, sys.nb_mask,
+                salt_scale, use_kernel=self._use_kernel)
+
+        return force_fn
 
     def _propagate_vmap(self, state, ctrl, n_steps, rngs, max_steps: int):
         """Reference oracle: vmap over single-replica programs."""
@@ -324,20 +384,30 @@ class LJEngine:
 
         return jax.vmap(one)(keys)
 
+    def _force_stack(self, pos):
+        """Analytic forces for the stack — the direct force pass (one
+        kernel launch / one jnp pairwise sweep), not autodiff of the
+        energy: the hot loop never materializes the energy forward."""
+        if self.use_pallas:
+            from repro.kernels.lj_forces import ops as ljops
+            return ljops.lj_forces_batched(pos, self.sigma, self.eps,
+                                           self.box)
+        from repro.kernels.lj_forces import ref as ljref
+        return ljref.lj_forces(pos, self.sigma, self.eps, self.box)
+
     def propagate(self, state, ctrl, n_steps, rngs, max_steps: int = 0):
         max_steps = max_steps or int(jnp.max(n_steps))
         if not self.batched:
             return self._propagate_vmap(state, ctrl, n_steps, rngs,
                                         max_steps)
         temp = ctrl["temperature"]
-        force_fn = jax.grad(lambda p: -jnp.sum(self._potential_stack(p)))
         # The shared force is evaluated at the wrapped positions; the
         # vmap oracle evaluates its trailing half-B at the pre-wrap
         # positions, which agrees up to fp rounding (the minimum-image
         # force is wrap-invariant).
-        return I.propagate_replica_major(state, force_fn, self.masses,
-                                         temp, n_steps, rngs, max_steps,
-                                         self.dt, self.gamma,
+        return I.propagate_replica_major(state, self._force_stack,
+                                         self.masses, temp, n_steps, rngs,
+                                         max_steps, self.dt, self.gamma,
                                          box=self.box)
 
     def _propagate_vmap(self, state, ctrl, n_steps, rngs, max_steps: int):

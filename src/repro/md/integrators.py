@@ -2,6 +2,13 @@
 
 positions Angstrom, velocities Angstrom/ps, masses amu, energies kcal/mol.
 acceleration = F / m * AKMA  (AKMA = 418.4 converts kcal/mol/A/amu to A/ps^2).
+
+``force_fn`` is any (R, N, 3) -> (R, N, 3) stacked force field — the
+engines thread autodiff gradients (oracle paths) or the analytic
+chain/nonbonded force passes (``force_path="pallas"``, the default)
+through the same loop, so ``run_fused`` scans over whichever force
+implementation the engine selected with identical masking/noise
+semantics.
 """
 from __future__ import annotations
 

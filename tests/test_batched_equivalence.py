@@ -26,7 +26,9 @@ from repro.core import REMDDriver, build_grid, ctrl_for_assignment
 from repro.md import HarmonicEngine, LJEngine, MDEngine
 
 ENGINES = {
-    "md": lambda batched: MDEngine(batched=batched),
+    "md": lambda batched: MDEngine(batched=batched),   # analytic "pallas"
+    "md_autodiff": lambda batched: MDEngine(
+        batched=batched, force_path="batched" if batched else None),
     "lj": lambda batched: LJEngine(n_particles=27, batched=batched),
     "harmonic": lambda batched: HarmonicEngine(batched=batched),
 }
@@ -134,7 +136,7 @@ def test_batched_energy_terms_match_per_replica():
 def test_run_fused_exchange_decisions_bitwise_identical(name):
     """The discrete RE trajectory must not depend on the propagate layout:
     batched and vmap drivers make the SAME exchange decisions."""
-    dims = DIMS if name == "md" else (("temperature", 6),)
+    dims = DIMS if name.startswith("md") else (("temperature", 6),)
     cfg = RepExConfig(dimensions=dims, md_steps_per_cycle=3, n_cycles=6)
     d_b = REMDDriver(ENGINES[name](True), cfg)
     d_v = REMDDriver(ENGINES[name](False), cfg)
@@ -146,6 +148,30 @@ def test_run_fused_exchange_decisions_bitwise_identical(name):
     for h_b, h_v in zip(d_b.history, d_v.history):
         for key in ("cycle", "dim", "accept", "attempt", "failed"):
             assert h_b[key] == h_v[key], key
+
+
+@pytest.mark.parametrize("force_path", ["pallas", "batched", "vmap"])
+@pytest.mark.parametrize("chunk", [2, 3])
+def test_run_fused_exchange_decisions_across_force_paths(force_path, chunk):
+    """PR-3 acceptance pin: ``run_fused`` exchange decisions are
+    bitwise-identical across ``force_path`` in {pallas, batched, vmap}
+    AND across chunk sizes (the pallas/chunk=3 run is the baseline)."""
+    cfg = RepExConfig(dimensions=DIMS, md_steps_per_cycle=3, n_cycles=6)
+
+    def run(fp, ck):
+        eng = (MDEngine(batched=False) if fp == "vmap"
+               else MDEngine(force_path=fp))
+        d = REMDDriver(eng, cfg)
+        ens = d.run_fused(d.init(), chunk_cycles=ck)
+        return np.asarray(ens.assignment), d.acceptance, d.history
+
+    base_a, base_acc, base_h = run("pallas", 3)
+    a, acc, hist = run(force_path, chunk)
+    np.testing.assert_array_equal(a, base_a)
+    assert acc == base_acc
+    for h, hb in zip(hist, base_h):
+        for key in ("cycle", "dim", "accept", "attempt", "failed"):
+            assert h[key] == hb[key], key
 
 
 def test_lj_pallas_batched_kernel_vs_ref():

@@ -1,0 +1,93 @@
+"""Compiled-op-count regression probes (thunk-creep guard).
+
+PR 1's floor analysis showed that once cycle fusion amortizes dispatch,
+CPU/TPU cycle time tracks the number of executable ops in the compiled
+module.  PR 3 collapsed the propagate force subgraph into analytic
+passes; these tests pin the compiled op count of the fused-force
+propagate step so a refactor that silently re-expands the force graph
+(autodiff creeping back in, a fusion-breaking layout change) fails CI
+instead of shipping a 2x cycle-time regression.
+
+Budgets are pinned ~25-30% above the measured count (pallas propagate
+measured ~115 ops, analytic force fn ~62) to absorb XLA version drift
+while still catching structural regressions (the autodiff path sits at
+~150 propagate ops — outside the budget — and loses the relative
+comparison below).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.config import RepExConfig
+from repro.core import build_grid, ctrl_for_assignment
+from repro.launch.hlo_analysis import compiled_op_count, count_ops
+from repro.md import MDEngine
+
+PROPAGATE_OP_BUDGET = 150
+FORCE_OP_BUDGET = 80
+
+
+def _propagate_args(n=8, steps=10):
+    grid = build_grid(RepExConfig(dimensions=(("temperature", n),)))
+    ctrl = ctrl_for_assignment(grid, jnp.arange(n))
+    rngs = jax.random.split(jax.random.key(7), n)
+    n_steps = jnp.full(n, steps, jnp.int32)
+    return ctrl, rngs, n_steps, steps
+
+
+def test_fused_force_propagate_op_budget():
+    """The pallas-path propagate step stays under the pinned budget."""
+    ctrl, rngs, n_steps, steps = _propagate_args()
+    eng = MDEngine()                 # force_path="pallas" default
+    assert eng.force_path == "pallas"
+    state = eng.init_state(jax.random.key(0), 8)
+    total, census = compiled_op_count(
+        lambda s: eng.propagate(s, ctrl, n_steps, rngs, max_steps=steps),
+        state)
+    assert total <= PROPAGATE_OP_BUDGET, (
+        f"propagate compiled to {total} ops (> {PROPAGATE_OP_BUDGET}): "
+        f"{census}")
+
+
+def test_analytic_force_fn_op_budget():
+    """The analytic force evaluation itself stays small."""
+    ctrl, _, _, _ = _propagate_args()
+    eng = MDEngine()
+    state = eng.init_state(jax.random.key(0), 8)
+    total, census = compiled_op_count(eng._analytic_force_fn(ctrl),
+                                      state["pos"])
+    assert total <= FORCE_OP_BUDGET, (
+        f"force fn compiled to {total} ops (> {FORCE_OP_BUDGET}): {census}")
+
+
+def test_analytic_path_beats_autodiff_op_count():
+    """Relative guard, robust to XLA drift: the analytic force path must
+    compile to fewer executable ops than the autodiff oracle path."""
+    ctrl, rngs, n_steps, steps = _propagate_args()
+
+    def count(fp):
+        eng = MDEngine(force_path=fp)
+        state = eng.init_state(jax.random.key(0), 8)
+        total, _ = compiled_op_count(
+            lambda s: eng.propagate(s, ctrl, n_steps, rngs,
+                                    max_steps=steps), state)
+        return total
+
+    assert count("pallas") < count("batched")
+
+
+def test_count_ops_fusion_and_trip_semantics():
+    """count_ops counts a fusion once, skips bookkeeping ops, and does
+    NOT weight by while-loop trip counts (static census)."""
+    def f(x):
+        def body(_, c):
+            return jnp.tanh(c) * 2.0 + 1.0
+        return jax.lax.fori_loop(0, 100, body, x)
+
+    x = jnp.ones((8, 8))
+    text = jax.jit(f).lower(x).compile().as_text()
+    census = count_ops(text)
+    total = sum(census.values())
+    assert census.get("parameter", 0) == 0
+    assert census.get("get-tuple-element", 0) == 0
+    # a 100-trip loop over a ~3-op body stays a handful of static ops
+    assert 1 <= total < 30, census

@@ -290,3 +290,32 @@ def test_checkpoint_restart_roundtrip(tmp_path):
                                   np.asarray(ens.assignment))
     np.testing.assert_allclose(np.asarray(restored.state["pos"]),
                                np.asarray(ens.state["pos"]), atol=1e-6)
+
+
+def test_engine_capabilities_detection():
+    """Duck-typed feature detection of optional engine extensions."""
+    from repro.core import engine_capabilities
+    from repro.md import HarmonicEngine
+
+    caps = engine_capabilities(MDEngine())
+    assert caps["energy_pair"] and caps["replica_features"]
+    assert caps["force_path"] == "pallas" and caps["batched"]
+    assert caps["ctrl_keys"] is None          # MD engine reads all fields
+
+    caps = engine_capabilities(HarmonicEngine())
+    assert caps["ctrl_keys"] == ("temperature", "beta")
+    assert caps["force_path"] is None         # closed-form propagator
+
+    class Minimal:
+        def init_state(self, rng, n): ...
+        def propagate(self, *a, **k): ...
+        def energy(self, *a): ...
+        def cross_energy(self, *a): ...
+        def is_failed(self, s): ...
+
+    caps = engine_capabilities(Minimal())
+    assert not caps["energy_pair"] and caps["ctrl_keys"] is None
+
+    driver = REMDDriver(MDEngine(), RepExConfig(
+        dimensions=(("temperature", 2),)))
+    assert driver.capabilities["force_path"] == "pallas"
