@@ -349,7 +349,125 @@ def cycle_fusion(rows: List[str]):
         json.dump(payload, f, indent=2)
 
 
+def neighbor_list(rows: List[str]):
+    """System-size scaling: dense (R, N, N) nonbonded vs the sparse
+    neighbor-list path (``MDEngine(nonbonded="sparse")``).
+
+    Two sweeps, both emitted to ``BENCH_neighbor_list.json``:
+
+      cycle   — full fused REMD cycle (run_fused, chunk 16) at
+                N in {16, 64, 256}: the acceptance-criterion table.
+                Dense pays O(N^2) EVERY step; sparse pays O(N * k_max)
+                per step + an amortized O(N^2) rebuild when the skin
+                check trips (collective policy, so ~one build event per
+                ensemble drift period).
+      force   — one jitted nonbonded force evaluation at
+                N in {64, 256, 1024}: the clean asymptotics, with the
+                fitted log-log exponent per path (the fixed per-cycle
+                costs that flatten the cycle sweep at small N are
+                absent here).
+
+    ``NEIGHBOR_LIST_SMOKE=1`` shrinks both sweeps for CI.
+    """
+    import json
+    import os
+
+    from repro.kernels.lj_forces import ref as nb_ref
+    from repro.md import neighbors as NB
+    from repro.md.system import chain_molecule as chain
+
+    smoke = bool(os.environ.get("NEIGHBOR_LIST_SMOKE"))
+    n_rep = 8
+    n_cycles = 16 if smoke else 48
+    chunk = 8 if smoke else 16
+    reps = 2 if smoke else 6
+    cycle_ns = (16, 64) if smoke else (16, 64, 256)
+    force_ns = (64, 256) if smoke else (64, 256, 1024)
+    cfg = RepExConfig(dimensions=(("temperature", n_rep),),
+                      md_steps_per_cycle=MD_STEPS, n_cycles=n_cycles)
+    payload: Dict[str, Dict] = {"md_steps_per_cycle": MD_STEPS,
+                                "n_replicas": n_rep, "n_cycles": n_cycles,
+                                "cycle": {}, "force_pass": {}}
+
+    def ab_us_per_cycle(drv_a, drv_b):
+        """INTERLEAVED min-of-reps: the container's cgroup throttles in
+        multi-second windows, so timing one engine's reps back-to-back
+        can land an entire side in a throttled window — alternating
+        single reps gives both sides the same window mix (the PR-3
+        same-process A/B methodology)."""
+        best = [float("inf"), float("inf")]
+        for d in (drv_a, drv_b):
+            d.run_fused(d.init(), n_cycles=chunk, chunk_cycles=chunk)
+        for _ in range(reps):
+            for i, d in enumerate((drv_a, drv_b)):
+                e = d.init()
+                t0 = time.perf_counter()
+                d.run_fused(e, n_cycles=n_cycles, chunk_cycles=chunk)
+                best[i] = min(best[i],
+                              (time.perf_counter() - t0) / n_cycles)
+        return best[0] * 1e6, best[1] * 1e6
+
+    for n in cycle_ns:
+        sys_ = chain(n)
+        eng_s = MDEngine(system=sys_, nonbonded="sparse")
+        drv_s = REMDDriver(eng_s, cfg)
+        t_dense, t_sparse = ab_us_per_cycle(
+            REMDDriver(MDEngine(system=sys_), cfg), drv_s)
+        h = drv_s.history[-1]
+        rows.append(f"nlist_cycle_dense_N{n},{t_dense:.0f},us_per_cycle")
+        rows.append(f"nlist_cycle_sparse_N{n},{t_sparse:.0f},"
+                    f"speedup={t_dense / t_sparse:.2f}x;"
+                    f"k_max={eng_s.k_max};"
+                    f"rebuilds={h['nb_rebuilds']:.0f};"
+                    f"overflow={h['nb_overflow']:.0f}")
+        payload["cycle"][str(n)] = {
+            "dense_us_per_cycle": t_dense,
+            "sparse_us_per_cycle": t_sparse,
+            "speedup": t_dense / t_sparse,
+            "k_max": eng_s.k_max, "cutoff": eng_s.cutoff,
+            "skin": eng_s.skin,
+            "nb_rebuilds": h["nb_rebuilds"],
+            "nb_overflow": h["nb_overflow"],
+        }
+
+    for n in force_ns:
+        sys_ = chain(n)
+        eng_s = MDEngine(system=sys_, nonbonded="sparse")
+        pos = eng_s.init_state(jax.random.key(0), n_rep)
+        nl = pos["nlist"]
+        f_d = jax.jit(lambda p: nb_ref.nonbonded_force(
+            p, sys_.lj_sigma, sys_.lj_eps, sys_.charges, sys_.nb_mask))
+        f_s = jax.jit(lambda p: nb_ref.nonbonded_force_sparse(
+            p, sys_.lj_sigma, sys_.lj_eps, sys_.charges, nl["idx"],
+            nl["valid"], eng_s.cutoff))
+        t_d = t_s = float("inf")
+        for fn in (f_d, f_s):
+            jax.block_until_ready(fn(pos["pos"]))       # compile both
+        for _ in range(8):                              # interleaved A/B
+            t_d = min(t_d, _time(f_d, pos["pos"], reps=reps))
+            t_s = min(t_s, _time(f_s, pos["pos"], reps=reps))
+        t_d, t_s = t_d * 1e6, t_s * 1e6
+        rows.append(f"nlist_force_dense_N{n},{t_d:.0f},us_per_eval")
+        rows.append(f"nlist_force_sparse_N{n},{t_s:.0f},"
+                    f"speedup={t_d / t_s:.2f}x;k_max={eng_s.k_max}")
+        payload["force_pass"][str(n)] = {
+            "dense_us": t_d, "sparse_us": t_s, "k_max": eng_s.k_max}
+
+    # fitted log-log exponents over the force sweep (clean asymptotics)
+    ns = np.array([float(n) for n in force_ns])
+    for path in ("dense", "sparse"):
+        ts = np.array([payload["force_pass"][str(int(n))][f"{path}_us"]
+                       for n in ns])
+        exp = float(np.polyfit(np.log(ns), np.log(ts), 1)[0])
+        payload[f"{path}_force_exponent"] = exp
+        rows.append(f"nlist_exponent_{path},0,dlog_t_dlog_N={exp:.2f}")
+
+    with open(JSON_OUT or "BENCH_neighbor_list.json", "w") as f:
+        json.dump(payload, f, indent=2)
+
+
 ALL = [fig5_overheads, fig6_1d_weak_scaling, fig7_parallel_efficiency,
        fig8_engine_swap, fig9_mremd_weak, fig10_mremd_strong,
        fig12_multicore_replicas, fig13_async_utilization,
-       table1_capabilities, xmat_exchange_scaling, cycle_fusion]
+       table1_capabilities, xmat_exchange_scaling, cycle_fusion,
+       neighbor_list]

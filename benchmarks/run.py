@@ -6,9 +6,12 @@ catalogue; roofline.py emits the dry-run-derived §Roofline table).
     python benchmarks/run.py [FILTER] [--json-out PATH]
 
 ``FILTER`` selects benchmarks by substring; ``--json-out`` redirects the
-JSON payload of benches that emit one (cycle_fusion) — e.g.
+JSON payload of benches that emit one (``cycle_fusion`` ->
+``BENCH_cycle_fusion.json``, ``neighbor_list`` ->
+``BENCH_neighbor_list.json`` by default) — e.g.
 ``cycle_fusion --json-out BENCH_force_kernel.json`` records the
-force-kernel sweep.
+force-kernel sweep.  Use a FILTER when redirecting so only one bench
+writes to the override path.
 """
 from __future__ import annotations
 

@@ -76,6 +76,21 @@ class SimulationEngine(Protocol):
 #       surfaced by ``engine_capabilities`` for logs and benchmarks.
 
 
+# The neighbor-list health extension (``nb_stats``) reports these keys,
+# always, fixed-shape — THE one definition; engines' zero branches, the
+# fused-cycle stats fallback and the driver's dead-path literal all
+# derive from it, so adding a counter is a one-place change.
+NB_STAT_KEYS = ("nb_overflow", "nb_rebuilds")
+
+
+def nb_zero_stats() -> Dict[str, Any]:
+    """The all-zero ``nb_stats`` pytree (same keys/shapes as a live
+    report — fused-scan stats must keep one shape across engines)."""
+    import jax.numpy as jnp
+    z = jnp.zeros((), jnp.float32)
+    return {k: z for k in NB_STAT_KEYS}
+
+
 def engine_capabilities(engine) -> Dict[str, Any]:
     """Feature-detect the optional extensions of a SimulationEngine.
 
@@ -95,4 +110,10 @@ def engine_capabilities(engine) -> Dict[str, Any]:
         "ctrl_keys": tuple(keys) if keys is not None else None,
         "force_path": getattr(engine, "force_path", None),
         "batched": bool(getattr(engine, "batched", False)),
+        # "dense" / "sparse" for the MD engine's nonbonded pass; None =
+        # engine has no nonbonded selection.  Engines with nb_stats
+        # surface neighbor-list health (overflow/rebuild counters) as
+        # per-cycle driver stats.
+        "nonbonded": getattr(engine, "nonbonded", None),
+        "nb_stats": callable(getattr(engine, "nb_stats", None)),
     }

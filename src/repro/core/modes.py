@@ -61,36 +61,62 @@ def propagate_mode1(engine, state, ctrl, n_steps, rng, mesh=None, *,
 
 def propagate_mode2(engine, state, ctrl, n_steps, rng, n_waves: int,
                     mesh=None, *, max_steps: int = 0):
-    """Time-multiplexed waves: lax.map over ``n_waves`` sequential batches."""
+    """Time-multiplexed waves: lax.map over ``n_waves`` sequential batches.
+
+    When ``n_waves`` does not divide R, the trailing wave is PADDED with
+    idle lanes (replica 0's state replicated, ``n_steps = 0``) — every
+    engine already guarantees zero-step lanes stay bitwise frozen, so a
+    pad lane is a masked no-op slot, exactly like an exhausted async
+    straggler.  Keys stay per-REPLICA (pad lanes reuse replica 0's key,
+    whose draws are discarded), so trajectories are identical to the
+    pad-free path.
+    """
     R = n_steps.shape[0]
-    assert R % n_waves == 0, (R, n_waves)
-    W = R // n_waves
+    W = -(-R // n_waves)
+    pad = n_waves * W - R
     keys = per_replica_keys(rng, R)
+
+    def pad_rep(x):
+        if pad == 0 or getattr(x, "ndim", 0) < 1 or x.shape[0] != R:
+            return x
+        fill = jnp.broadcast_to(x[0:1], (pad,) + x.shape[1:])
+        return jnp.concatenate([x, fill], axis=0)
+
+    state_p = jax.tree.map(pad_rep, state)
+    ctrl_p = jax.tree.map(pad_rep, ctrl)
+    steps_p = jnp.concatenate(
+        [n_steps, jnp.zeros(pad, n_steps.dtype)]) if pad else n_steps
+    keys_p = pad_rep(keys)
 
     def reshape(x):
         return x.reshape((n_waves, W) + x.shape[1:])
-
-    state_w = jax.tree.map(reshape, state)
-    ctrl_w = jax.tree.map(reshape, ctrl)
-    steps_w = reshape(n_steps)
-    keys_w = reshape(keys)
 
     def one_wave(args):
         st, ct, ns, k = args
         return engine.propagate(st, ct, ns, k, max_steps=max_steps)
 
-    out = lax.map(one_wave, (state_w, ctrl_w, steps_w, keys_w))
+    out = lax.map(one_wave, (jax.tree.map(reshape, state_p),
+                             jax.tree.map(reshape, ctrl_p),
+                             reshape(steps_p), reshape(keys_p)))
     merged = jax.tree.map(
-        lambda x: x.reshape((R,) + x.shape[2:]), out)
+        lambda x: x.reshape((n_waves * W,) + x.shape[2:])[:R], out)
     return shard_replicas(merged, mesh) if mesh is not None else merged
 
 
 def auto_mode(n_replicas: int, slots: int) -> Dict[str, Any]:
     """Pick the execution mode from workload size S vs resource size R —
-    the paper's auto dispatch.  Returns mode + wave count."""
+    the paper's auto dispatch.  Returns mode + wave count.
+
+    ``n_waves`` is always ``ceil(R / slots)`` (clamped to [1, R]): the
+    minimum number of sequential launches that fits every wave within
+    ``slots``.  The old pad-free search walked n_waves up to the next
+    divisor of R — for a prime R just over ``slots`` that degenerated
+    all the way to R waves of ONE replica (a 13-replica ladder on 12
+    slots serialized 13x instead of 2x).  Non-dividing wave counts now
+    pad the trailing wave with masked no-op lanes instead
+    (:func:`propagate_mode2`).
+    """
     if slots <= 0 or n_replicas <= slots:
         return {"mode": "mode1", "n_waves": 1}
-    n_waves = -(-n_replicas // slots)
-    while n_replicas % n_waves != 0:    # pad-free wave count
-        n_waves += 1
+    n_waves = min(max(-(-n_replicas // slots), 1), n_replicas)
     return {"mode": "mode2", "n_waves": n_waves}

@@ -147,11 +147,16 @@ def fused_cycle(engine, grid: ControlGrid, ens: Ensemble, *,
     round-trips inside the chunk.
 
     Returns (new_ens, stats) where stats is a FLAT dict of fixed-shape
-    scalars (``dim``, ``accepted``, ``attempted``, ``ready_frac``)
+    arrays (``dim``, ``accepted``, ``attempted``, ``ready_frac``, the
+    post-cycle ``assignment`` row, and the engine's neighbor-list health
+    scalars ``nb_overflow`` / ``nb_rebuilds`` — zeros for dense engines)
     suitable for stacking into the scan's per-cycle ys.  ``mean_delta``
     is deliberately NOT carried: nothing downstream reads it per-cycle,
     and dropping it lets XLA dead-code-eliminate its reduction from the
-    scan body (the fused hot loop is op-count-bound on CPU).
+    scan body (the fused hot loop is op-count-bound on CPU).  The
+    per-cycle assignment trace is what the statistical-correctness
+    suite consumes (rung occupancy, per-pair acceptance) — K cycles of
+    discrete trajectory for one host fetch.
     """
     execution = execution or {"mode": "mode1", "n_waves": 1}
     n_dims = len(grid.dims)
@@ -166,5 +171,19 @@ def fused_cycle(engine, grid: ControlGrid, ens: Ensemble, *,
         "accepted": stats["accepted"],
         "attempted": stats["attempted"],
         "ready_frac": jnp.mean(ready.astype(jnp.float32)),
+        "assignment": new_ens.assignment,
     }
+    flat.update(nb_health(engine, new_ens.state))
     return new_ens, flat
+
+
+def nb_health(engine, state) -> Dict[str, jax.Array]:
+    """Engine-agnostic neighbor-list health scalars for cycle stats:
+    engines exposing ``nb_stats`` (the sparse nonbonded path) report
+    their cumulative overflow/rebuild counters; everything else reports
+    zeros so the stats pytree keeps one shape across engines."""
+    from repro.core.engine import nb_zero_stats
+    fn = getattr(engine, "nb_stats", None)
+    if callable(fn):
+        return fn(state)
+    return nb_zero_stats()

@@ -40,6 +40,13 @@ Two execution paths pay these terms very differently:
 The driver supports both patterns, both execution modes, failure
 injection/recovery, and periodic ensemble checkpointing (restart-able,
 mesh-independent; the fused path checkpoints at chunk boundaries).
+
+Every history entry also records the post-cycle ``assignment`` row (the
+discrete RE trajectory — what the statistical-correctness suite analyses
+for rung occupancy and per-pair acceptance) and the engine's
+neighbor-list health counters ``nb_overflow`` / ``nb_rebuilds`` (zero
+for dense engines): a sparse run that dropped pairs to capacity is
+visible in the stats, never silent.
 """
 from __future__ import annotations
 
@@ -54,6 +61,7 @@ from repro.config import RepExConfig
 from repro.core import failures as F
 from repro.core import patterns
 from repro.core.controls import ControlGrid, build_grid
+from repro.core.engine import NB_STAT_KEYS, engine_capabilities
 from repro.core.ensemble import Ensemble, make_ensemble
 from repro.core.modes import auto_mode
 from repro.ckpt import CheckpointManager
@@ -63,9 +71,12 @@ class REMDDriver:
     def __init__(self, engine, cfg: RepExConfig, mesh=None,
                  slots: Optional[int] = None, ckpt_dir: Optional[str] = None,
                  ckpt_every: int = 0, failure_rate: float = 0.0):
-        from repro.core.engine import engine_capabilities
         self.engine = engine
         self.capabilities = engine_capabilities(engine)
+        # can nb_stats ever be nonzero?  (an engine reporting a dense
+        # nonbonded path declares its own counters dead)
+        self._nb_live = (self.capabilities["nb_stats"]
+                         and self.capabilities["nonbonded"] != "dense")
         self.cfg = cfg
         self.mesh = mesh
         self.grid: ControlGrid = build_grid(cfg)
@@ -78,8 +89,8 @@ class REMDDriver:
         elif cfg.execution_mode == "mode2":
             self.execution = auto_mode(n, eff_slots)
             if self.execution["mode"] != "mode2":      # force at least 2 waves
-                self.execution = {"mode": "mode2",
-                                  "n_waves": 2 if n % 2 == 0 else 1}
+                # mode2 pads non-dividing waves, so 2 waves always works
+                self.execution = {"mode": "mode2", "n_waves": min(2, n)}
         else:
             self.execution = auto_mode(n, eff_slots)
         self.failure_rate = failure_rate
@@ -152,6 +163,11 @@ class REMDDriver:
             new_ens, stats = step(ens)
             jax.block_until_ready(new_ens.assignment)
             t_step = time.perf_counter() - t1        # T_MD + T_EX fused
+            # nb counters are read from the PRE-recovery state, exactly
+            # like the fused path (fused_cycle stats are computed before
+            # detect_recover): a replica that overflowed and then failed
+            # still reports its overflow even after relaunch rewinds it
+            nb_state = new_ens.state
 
             # failure detection + recovery
             t2 = time.perf_counter()
@@ -171,6 +187,16 @@ class REMDDriver:
             s = jax.device_get(stats[dkey])
             self.acceptance[dkey][0] += float(s["accepted"])
             self.acceptance[dkey][1] += float(s["attempted"])
+            # engines whose nb_stats can only ever report zeros (no
+            # neighbor list: dense MD, harmonic, ...) skip the
+            # per-cycle dispatch + device round-trip entirely
+            if self._nb_live:
+                nb = jax.device_get(
+                    patterns.nb_health(self.engine, nb_state))
+                nb = {k: float(v) for k, v in nb.items()}
+            else:
+                nb = dict.fromkeys(NB_STAT_KEYS, 0.0)
+            assignment = jax.device_get(new_ens.assignment)
             t_data = time.perf_counter() - t3
 
             self.history.append({
@@ -180,6 +206,9 @@ class REMDDriver:
                 "accept": float(s["accepted"]),
                 "attempt": float(s["attempted"]),
                 "failed": int(failed.sum()),
+                "assignment": assignment,
+                "nb_overflow": float(nb["nb_overflow"]),
+                "nb_rebuilds": float(nb["nb_rebuilds"]),
             })
             ens = new_ens
 
@@ -267,6 +296,9 @@ class REMDDriver:
             cycles = ys["cycle"].tolist()
             failed = ys["failed"].tolist()
             rfrac = ys["ready_frac"].tolist()
+            overfl = ys["nb_overflow"].tolist()
+            rebuilds = ys["nb_rebuilds"].tolist()
+            assignment = ys["assignment"]          # (K, R) int32
             t_step, t_d = t_chunk / k, t_data / k
             for i in range(k):
                 dkey = f"dim{dims[i]}"
@@ -279,6 +311,9 @@ class REMDDriver:
                     "t_recover": 0.0, "t_data": t_d,
                     "accept": acc[i], "attempt": att[i],
                     "failed": failed[i], "ready_frac": rfrac[i],
+                    "assignment": assignment[i],
+                    "nb_overflow": overfl[i],
+                    "nb_rebuilds": rebuilds[i],
                 })
             done += k
 

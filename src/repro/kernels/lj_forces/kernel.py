@@ -186,6 +186,88 @@ def _nonbonded_kernel_batched(ci_ref, cj_ref, m_ref, f_ref, elj_ref,
          zero, zero])[None]
 
 
+_DN = (((1,), (0,)), ((), ()))     # contract last dim of lhs w/ first of rhs
+
+
+def _nonbonded_sparse_kernel_batched(c_ref, idx_ref, val_ref, f_ref,
+                                     elj_ref, eel_ref, *, coulomb,
+                                     cutoff, k_pad):
+    """One program per replica: K one-hot gather matmuls + VPU rows.
+
+    Neighbor slot k of every atom is gathered in ONE (8, Np) @ (Np, Np)
+    matmul — ``oh[n, i] = (idx[k, i] == n)`` — the same dense-one-hot
+    trick the chain_forces kernel uses for its topology gathers (MXU
+    work instead of dynamic indexing).  Slot validity and the true
+    cutoff mask every contribution, so padded K-rows, padded atoms and
+    sentinel indices are all inert.
+    """
+    c = c_ref[0]                                   # (8, Np)
+    n_pad = c.shape[1]
+    xi, yi, zi = c[0:1], c[1:2], c[2:3]
+    sig_i, se_i, q_i = c[4:5], c[5:6], c[6:7]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (n_pad, n_pad), 0)
+
+    def body(k, carry):
+        facc, elj, eel = carry
+        idx_row = idx_ref[0, pl.ds(k, 1), :]       # (1, Np)
+        val_row = val_ref[0, pl.ds(k, 1), :]
+        oh = (iota == idx_row).astype(jnp.float32)
+        g = jax.lax.dot_general(c, oh, _DN,
+                                preferred_element_type=jnp.float32)
+        dx, dy, dz = xi - g[0:1], yi - g[1:2], zi - g[2:3]
+        r2 = dx * dx + dy * dy + dz * dz
+        mask = val_row * (r2 <= cutoff * cutoff).astype(jnp.float32)
+        r2 = r2 + (1.0 - mask)
+        sig = 0.5 * (sig_i + g[4:5])
+        eps = se_i * g[5:6]                        # rows carry sqrt(eps)
+        qq = q_i * g[6:7]
+        s6 = (sig * sig / r2) ** 3
+        r = jnp.sqrt(r2)
+        c_lj = 24.0 * eps * (2.0 * s6 * s6 - s6) / r2 * mask
+        c_el = coulomb * qq / (r2 * r) * mask
+        elj = elj + 0.5 * jnp.sum(4.0 * eps * (s6 * s6 - s6) * mask)
+        eel = eel + 0.5 * jnp.sum(coulomb * qq / r * mask)
+        zero = jnp.zeros_like(xi)
+        facc = facc + jnp.concatenate(
+            [c_lj * dx, c_lj * dy, c_lj * dz,
+             c_el * dx, c_el * dy, c_el * dz, zero, zero], axis=0)
+        return facc, elj, eel
+
+    facc = jnp.zeros_like(c)
+    facc, elj, eel = jax.lax.fori_loop(
+        0, k_pad, body, (facc, jnp.zeros(()), jnp.zeros(())))
+    f_ref[...] = facc[None]
+    elj_ref[0, 0] = elj
+    eel_ref[0, 0] = eel
+
+
+def nonbonded_sparse_kernel_batched(coords, idx, valid, *, coulomb: float,
+                                    cutoff: float,
+                                    interpret: bool = False):
+    """coords (R, 8, Np) packed (rows as ``nonbonded_kernel_batched``);
+    idx/valid (R, Kp, Np) SLOT-MAJOR transposed neighbor tables.
+    Returns (forces (R, 8, Np): rows 0..2 = LJ, 3..5 = elec;
+    e_lj (R, 1); e_el (R, 1)) from one launch."""
+    r, _, n_pad = coords.shape
+    k_pad = idx.shape[1]
+    kern = functools.partial(_nonbonded_sparse_kernel_batched,
+                             coulomb=coulomb, cutoff=cutoff, k_pad=k_pad)
+    return pl.pallas_call(
+        kern,
+        grid=(r,),
+        in_specs=[pl.BlockSpec((1, 8, n_pad), lambda q: (q, 0, 0)),
+                  pl.BlockSpec((1, k_pad, n_pad), lambda q: (q, 0, 0)),
+                  pl.BlockSpec((1, k_pad, n_pad), lambda q: (q, 0, 0))],
+        out_specs=[pl.BlockSpec((1, 8, n_pad), lambda q: (q, 0, 0)),
+                   pl.BlockSpec((1, 1), lambda q: (q, 0)),
+                   pl.BlockSpec((1, 1), lambda q: (q, 0))],
+        out_shape=[jax.ShapeDtypeStruct((r, 8, n_pad), jnp.float32),
+                   jax.ShapeDtypeStruct((r, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((r, 1), jnp.float32)],
+        interpret=interpret,
+    )(coords, idx, valid)
+
+
 def nonbonded_kernel_batched(coords, nb_mask, *, coulomb: float,
                              block: int = 128, interpret: bool = False):
     """coords (R, 8, N) packed (rows 0..2 xyz, 3 validity, 4 sigma,

@@ -146,6 +146,74 @@ def nonbonded(pos, lj_sigma, lj_eps, charges, nb_mask,
                              block=block, interpret=interpret)
 
 
+# -- sparse (neighbor-list) chain nonbonded --------------------------------
+
+
+def _pack_sparse(pos, lj_sigma, lj_eps, charges, idx, valid, block: int):
+    """Pack positions + per-atom params and transpose the (R, N, K)
+    neighbor tables to the kernel's slot-major (R, Kp, Np) layout
+    (K padded to the f32 sublane multiple, N to the lane block)."""
+    c, n, n_pad = _pack_nonbonded(pos, lj_sigma, lj_eps, charges, block)
+    r, _, k = idx.shape
+    k_pad = ((k + 7) // 8) * 8
+    idx_t = jnp.full((r, k_pad, n_pad), n_pad, jnp.int32)
+    idx_t = idx_t.at[:, :k, :n].set(jnp.swapaxes(idx, 1, 2))
+    val_t = jnp.zeros((r, k_pad, n_pad), jnp.float32)
+    val_t = val_t.at[:, :k, :n].set(jnp.swapaxes(valid, 1, 2))
+    return c, idx_t, val_t, n
+
+
+def nonbonded_sparse_batched(pos, lj_sigma, lj_eps, charges, idx, valid,
+                             cutoff: float, block: int = 128,
+                             interpret: Optional[bool] = None):
+    """(R, N, 3) stack through the sparse neighbor-list kernel: one
+    launch -> (f_lj, f_el, e_lj (R,), e_el (R,))."""
+    interp = default_interpret() if interpret is None else interpret
+    c, idx_t, val_t, n = _pack_sparse(pos, lj_sigma, lj_eps, charges,
+                                      idx, valid, block)
+    out, e_lj, e_el = K.nonbonded_sparse_kernel_batched(
+        c, idx_t, val_t, coulomb=ref.COULOMB, cutoff=cutoff,
+        interpret=interp)
+    f_lj = jnp.swapaxes(out[:, 0:3, :n], 1, 2).astype(pos.dtype)
+    f_el = jnp.swapaxes(out[:, 3:6, :n], 1, 2).astype(pos.dtype)
+    return f_lj, f_el, e_lj[:, 0], e_el[:, 0]
+
+
+def nonbonded_sparse(pos, lj_sigma, lj_eps, charges, idx, valid,
+                     cutoff: float, use_kernel: Optional[bool] = None,
+                     block: int = 128, interpret: Optional[bool] = None):
+    """Dispatching entry point for the sparse nonbonded pass (mirror of
+    :func:`nonbonded`): jnp oracle off-TPU, Pallas kernel on TPU."""
+    if use_kernel is None:
+        use_kernel = default_use_kernel()
+    if not use_kernel:
+        return ref.nonbonded_sparse(pos, lj_sigma, lj_eps, charges, idx,
+                                    valid, cutoff)
+    return nonbonded_sparse_batched(pos, lj_sigma, lj_eps, charges, idx,
+                                    valid, cutoff, block=block,
+                                    interpret=interpret)
+
+
+def nonbonded_force_sparse(pos, lj_sigma, lj_eps, charges, idx, valid,
+                           cutoff: float, salt_scale=None,
+                           use_kernel: Optional[bool] = None,
+                           block: int = 128,
+                           interpret: Optional[bool] = None):
+    """Combined (salt-folded) sparse nonbonded force for the propagate
+    loop: (R, N, 3) -> (R, N, 3)."""
+    if use_kernel is None:
+        use_kernel = default_use_kernel()
+    if not use_kernel:
+        return ref.nonbonded_force_sparse(pos, lj_sigma, lj_eps, charges,
+                                          idx, valid, cutoff, salt_scale)
+    f_lj, f_el, _, _ = nonbonded_sparse_batched(
+        pos, lj_sigma, lj_eps, charges, idx, valid, cutoff, block=block,
+        interpret=interpret)
+    if salt_scale is not None:
+        f_el = salt_scale[..., None, None] * f_el
+    return f_lj + f_el
+
+
 def nonbonded_force(pos, lj_sigma, lj_eps, charges, nb_mask,
                     salt_scale=None, use_kernel: Optional[bool] = None,
                     block: int = 128, interpret: Optional[bool] = None):

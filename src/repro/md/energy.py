@@ -332,6 +332,38 @@ def batched_features(pos, sys: MolecularSystem) -> Dict[str, jax.Array]:
     }
 
 
+def sparse_pair_energies(pos, sys: MolecularSystem, idx, valid,
+                         cutoff: float, use_kernel: bool = False
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """(LJ, elec) energies from the O(N * K) neighbor-list sweep.
+
+    The sparse analogue of :func:`_batched_pair_terms` — the TRUNCATED
+    potential (pairs beyond ``cutoff`` contribute zero), which is the
+    potential the sparse propagate path actually simulates, so exchange
+    energies and MD forces describe the same physics."""
+    from repro.kernels.lj_forces import ops as nb_ops
+    _, _, e_lj, e_el = nb_ops.nonbonded_sparse(
+        pos, sys.lj_sigma, sys.lj_eps, sys.charges, idx, valid, cutoff,
+        use_kernel=use_kernel)
+    return e_lj, e_el
+
+
+def sparse_features(pos, sys: MolecularSystem, idx, valid, cutoff: float,
+                    use_kernel: bool = False) -> Dict[str, jax.Array]:
+    """Per-replica features under the neighbor-list truncated potential:
+    same keys/shapes as :func:`batched_features`, with the pairwise sums
+    evaluated on the (R, N, K) list instead of all (R, N, N) pairs."""
+    e_bonded, phi, psi = _batched_bonded_terms(pos, sys)
+    e_lj, e_elec = sparse_pair_energies(pos, sys, idx, valid, cutoff,
+                                        use_kernel=use_kernel)
+    return {
+        "u_base": e_bonded + e_lj,
+        "u_elec": e_elec,
+        "phi": phi,
+        "psi": psi,
+    }
+
+
 def batched_bias_energy(phi, psi, ctrl_center, ctrl_k) -> jax.Array:
     """Umbrella restraints for the stack: phi/psi (R,), centers (R, U)."""
     angles = jnp.stack([jnp.rad2deg(phi), jnp.rad2deg(psi)], axis=-1)

@@ -53,14 +53,19 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+import numpy as np
+
 from repro.kernels import default_use_kernel
 from repro.kernels.chain_forces import ops as chain_ops
 from repro.kernels.lj_forces import ops as nb_ops
 from repro.md import energy as E
 from repro.md import integrators as I
-from repro.md.system import MolecularSystem, chain_molecule, initial_positions
+from repro.md import neighbors as NB
+from repro.md.system import (MolecularSystem, base_positions,
+                             chain_molecule, initial_positions)
 
 FORCE_PATHS = ("pallas", "batched", "vmap")
+NONBONDED_PATHS = ("dense", "sparse")
 
 
 def _any_nonfinite(state) -> jax.Array:
@@ -76,20 +81,42 @@ class MDEngine:
                  dt: float = 5e-4, gamma: float = 5.0,
                  init_temperature: float = 300.0, batched: bool = True,
                  force_path: Optional[str] = None,
-                 use_force_kernels: Optional[bool] = None):
+                 use_force_kernels: Optional[bool] = None,
+                 nonbonded: str = "dense", cutoff: float = 9.0,
+                 skin: float = 1.5, k_max: Optional[int] = None,
+                 nlist_build: Optional[str] = None):
         """``force_path``: "pallas" (analytic, default), "batched"
         (autodiff of the replica-major potential) or "vmap" (per-replica
         oracle).  ``batched=False`` implies "vmap" — requesting any
         other path with ``batched=False`` is a conflict and raises.
         ``use_force_kernels`` forces the Pallas kernels on/off for the
         analytic path (default: on only on TPU backends; off-TPU the
-        analytic jnp oracle runs)."""
+        analytic jnp oracle runs).
+
+        ``nonbonded``: "dense" (default — every pair, every step, the
+        oracle) or "sparse" (fixed-capacity neighbor list: O(N * k_max)
+        force/energy passes over the TRUNCATED potential with radial
+        ``cutoff``, lists rebuilt on device when an atom drifts more
+        than ``skin / 2``).  Sparse REQUIRES the analytic force path
+        (the default) and ``batched=True`` — requesting the autodiff or
+        vmap oracles with it raises.  ``k_max`` / ``nlist_build``
+        ("dense" | "cell") default to host-side heuristics from the
+        system's reference geometry (see ``repro.md.neighbors``);
+        capacity overflow is recorded in the list and surfaced per
+        cycle as the ``nb_overflow`` driver stat, never silently
+        ignored.
+        """
         self.system = system or chain_molecule()
         self.dt = dt
         self.gamma = gamma
         self.init_temperature = init_temperature
         self.batched = batched
         if not batched:
+            if nonbonded == "sparse":
+                raise ValueError(
+                    "nonbonded='sparse' needs the batched analytic "
+                    "path; it cannot run batched=False (the vmap "
+                    "oracle)")
             if force_path not in (None, "vmap"):
                 raise ValueError(
                     f"batched=False is the vmap oracle; it cannot run "
@@ -100,11 +127,73 @@ class MDEngine:
         if force_path not in FORCE_PATHS:
             raise ValueError(f"force_path must be one of {FORCE_PATHS}, "
                              f"got {force_path!r}")
+        if nonbonded not in NONBONDED_PATHS:
+            raise ValueError(f"nonbonded must be one of {NONBONDED_PATHS}, "
+                             f"got {nonbonded!r}")
+        if nonbonded == "sparse" and force_path != "pallas":
+            raise ValueError(
+                f"nonbonded='sparse' is an analytic-force feature; it "
+                f"cannot run force_path={force_path!r}")
         self.force_path = force_path
+        self.nonbonded = nonbonded
         self._use_kernel = (default_use_kernel() if use_force_kernels is None
                             else use_force_kernels)
         self._pack = (chain_ops.build_pack(self.system)
                       if force_path == "pallas" else None)
+        if nonbonded == "sparse":
+            self.cutoff = float(cutoff)
+            self.skin = float(skin)
+            self.r_list = self.cutoff + self.skin
+            base = base_positions(self.system)
+            mask = np.asarray(self.system.nb_mask)
+            self.k_max = (NB.suggest_k_max(self.system.n_atoms, base, mask,
+                                           self.r_list)
+                          if k_max is None else int(k_max))
+            if nlist_build is None:
+                # the dense build is one vectorized (R, N, N) pass —
+                # on CPU it beats the cell machinery (binning, stencil
+                # gathers, dedupe) until N^2 itself is the bottleneck
+                nlist_build = ("cell" if self.system.n_atoms >= 512
+                               else "dense")
+            if nlist_build not in ("dense", "cell"):
+                raise ValueError(f"nlist_build must be 'dense' or 'cell', "
+                                 f"got {nlist_build!r}")
+            self.nlist_build = nlist_build
+            extent = base.max(0) - base.min(0) + 2.0 * self.r_list
+            self._grid_dims = NB.suggest_grid_dims(extent, self.r_list)
+            self._cell_capacity = NB.suggest_cell_capacity(
+                base, self.r_list, self._grid_dims)
+
+    # -- neighbor-list plumbing (nonbonded="sparse") -----------------------
+
+    def _build_nlist(self, pos, prev=None):
+        return NB.build_neighbor_list(
+            pos, self.system.nb_mask, self.r_list, self.k_max,
+            method=self.nlist_build, grid_dims=self._grid_dims,
+            cell_capacity=self._cell_capacity, prev=prev)
+
+    def _refresh_nlist(self, pos, nlist):
+        # sync=True: one tripped replica refreshes the whole ensemble —
+        # the batched build costs the same per event, and synchronized
+        # skin budgets mean ~one build event per ensemble drift period
+        # instead of one per replica (see neighbors.maybe_rebuild)
+        return NB.maybe_rebuild(
+            pos, nlist, self.system.nb_mask, self.r_list, self.skin,
+            self.k_max, method=self.nlist_build,
+            grid_dims=self._grid_dims,
+            cell_capacity=self._cell_capacity, sync=True)
+
+    def nb_stats(self, state):
+        """Per-ensemble neighbor-list health scalars (fixed shape, so
+        the fused cycle can stack them into its per-cycle stats):
+        ``nb_overflow`` — cumulative dropped-pair count, worst replica;
+        ``nb_rebuilds`` — cumulative rebuild count, worst replica."""
+        if self.nonbonded != "sparse":
+            from repro.core.engine import nb_zero_stats
+            return nb_zero_stats()
+        nl = state["nlist"]
+        return {"nb_overflow": jnp.max(nl["overflow"]).astype(jnp.float32),
+                "nb_rebuilds": jnp.max(nl["rebuilds"]).astype(jnp.float32)}
 
     # -- protocol ----------------------------------------------------------
 
@@ -119,7 +208,10 @@ class MDEngine:
                                       (self.system.n_atoms, 3))
             return {"pos": pos, "vel": vel}
 
-        return jax.vmap(one)(keys)
+        state = jax.vmap(one)(keys)
+        if self.nonbonded == "sparse":
+            state["nlist"] = self._build_nlist(state["pos"])
+        return state
 
     def propagate(self, state, ctrl, n_steps, rngs, max_steps: int = 0):
         """``rngs``: per-replica key array (R,) — mode-invariant."""
@@ -128,6 +220,9 @@ class MDEngine:
             return self._propagate_vmap(state, ctrl, n_steps, rngs,
                                         max_steps)
         sys = self.system
+        if self.nonbonded == "sparse":
+            return self._propagate_sparse(state, ctrl, n_steps, rngs,
+                                          max_steps)
         if self.force_path == "batched":
             # Replicas are independent, so the gradient of the
             # replica-summed batched potential is the stacked per-replica
@@ -139,6 +234,37 @@ class MDEngine:
         return I.propagate_replica_major(state, force_fn, sys.masses,
                                          ctrl["temperature"], n_steps, rngs,
                                          max_steps, self.dt, self.gamma)
+
+    def _propagate_sparse(self, state, ctrl, n_steps, rngs,
+                          max_steps: int):
+        """The sparse MD loop: every iteration runs the skin check (a
+        conditional on-device rebuild) and then ONE O(N * k_max) force
+        pass; the neighbor list rides the loop carry and comes back in
+        the returned state, so the fused cycle scan threads it across
+        cycles with zero host round-trips."""
+        sys = self.system
+        salt = ctrl.get("salt")
+        salt_scale = None if salt is None else 1.0 - 0.5 * salt
+        u_c = ctrl.get("umbrella_center")
+        u_k = ctrl.get("umbrella_k")
+
+        def force_aux(pos, nlist):
+            nlist = self._refresh_nlist(pos, nlist)
+            f, _ = chain_ops.bonded_forces(pos, self._pack, u_c, u_k,
+                                           use_kernel=self._use_kernel)
+            f = f + nb_ops.nonbonded_force_sparse(
+                pos, sys.lj_sigma, sys.lj_eps, sys.charges,
+                nlist["idx"], nlist["valid"], self.cutoff, salt_scale,
+                use_kernel=self._use_kernel)
+            return f, nlist
+
+        md_state = {"pos": state["pos"], "vel": state["vel"]}
+        out, nlist = I.propagate_replica_major_aux(
+            md_state, force_aux, state["nlist"], sys.masses,
+            ctrl["temperature"], n_steps, rngs, max_steps, self.dt,
+            self.gamma)
+        out["nlist"] = nlist
+        return out
 
     def _analytic_force_fn(self, ctrl):
         """The fused analytic force field: one bonded pass + one
@@ -190,7 +316,7 @@ class MDEngine:
 
     def energy(self, state, ctrl):
         if self.batched:
-            f = E.batched_features(state["pos"], self.system)
+            f = self.replica_features(state)
             return E.batched_reduced_energy_from_features(f, ctrl)
         sys = self.system
 
@@ -201,6 +327,15 @@ class MDEngine:
         return jax.vmap(one)(state["pos"], ctrl)
 
     def replica_features(self, state):
+        if self.nonbonded == "sparse":
+            # features of the TRUNCATED potential, via the same list the
+            # propagate loop used — exchange decisions and dynamics see
+            # one consistent physics (the list is fresh to within one
+            # cycle's skin budget by the in-loop check)
+            nl = state["nlist"]
+            return E.sparse_features(state["pos"], self.system,
+                                     nl["idx"], nl["valid"], self.cutoff,
+                                     use_kernel=self._use_kernel)
         if self.batched:
             return E.batched_features(state["pos"], self.system)
         sys = self.system

@@ -43,11 +43,10 @@ def baoab_step(pos, vel, rng, force_fn: Callable, masses, temperature,
     return pos, vel
 
 
-def baoab_fused_iteration(i, pos, vel, noise_i, force_fn: Callable, masses,
-                          temperature, n_steps, max_steps: int,
-                          dt: float = 5e-4, gamma: float = 5.0,
-                          box: float = 0.0):
-    """One force-sharing BAOAB iteration over the whole replica stack.
+def _baoab_apply(i, pos, vel, f, noise_i, masses, temperature, n_steps,
+                 max_steps: int, dt: float, gamma: float, box: float):
+    """One force-sharing BAOAB update over the whole replica stack,
+    given this iteration's (already evaluated) force.
 
     The BAOAB sequence per step is B A O A B, and the force of a step's
     trailing half-B equals the force of the NEXT step's leading half-B
@@ -55,7 +54,7 @@ def baoab_fused_iteration(i, pos, vel, noise_i, force_fn: Callable, masses,
     sit between those two half-kicks lets every iteration evaluate the
     force ONCE and spend it twice:
 
-        iteration i:  f = F(pos_i)
+        iteration i:  f = F(pos_i)            (evaluated by the caller)
                       trailing half-B of step i-1   (masked for i == 0)
                       leading  half-B + A O A of step i  (masked for
                                                           i == max_steps)
@@ -64,7 +63,9 @@ def baoab_fused_iteration(i, pos, vel, noise_i, force_fn: Callable, masses,
     evaluations total instead of ``2 * max_steps`` — with every force
     evaluation INSIDE the loop body, which keeps XLA's compiled rounding
     identical across enclosing scan lengths (the fused driver's
-    bitwise-across-chunk-sizes guarantee).
+    bitwise-across-chunk-sizes guarantee).  The force evaluation is the
+    caller's job so plain and aux-carrying force fields (the sparse
+    path's neighbor list) share this exact update graph.
 
     pos/vel: (R, N, 3); temperature/n_steps: (R,) traced per-replica;
     ``noise_i``: this iteration's pre-drawn N(0,1) array (R, N, 3) (see
@@ -75,7 +76,6 @@ def baoab_fused_iteration(i, pos, vel, noise_i, force_fn: Callable, masses,
     Returns (pos, vel).
     """
     m = masses[None, :, None]
-    f = force_fn(pos)
     kick = 0.5 * dt * AKMA * f / m
     # trailing half-B of step i-1: existed and was active iff i-1 < n
     trail = ((i >= 1) & (i <= n_steps))[:, None, None]
@@ -105,20 +105,44 @@ def propagate_replica_major(state, force_fn: Callable, masses, temperature,
     This helper owns the subtle parts of the batched-propagate contract
     (iteration count, noise indexing, per-lane masking) so every engine
     shares one implementation; engines supply only the stacked
-    ``force_fn`` and the optional periodic ``box``.
+    ``force_fn`` and the optional periodic ``box``.  It is the aux-free
+    specialization of :func:`propagate_replica_major_aux` — ONE loop
+    body for every engine, dense or sparse.
     ``state``: {"pos", "vel"} with leading replica axis.
+    """
+    out, _ = propagate_replica_major_aux(
+        state, lambda pos, aux: (force_fn(pos), aux), (), masses,
+        temperature, n_steps, rngs, max_steps, dt, gamma, box=box)
+    return out
+
+
+def propagate_replica_major_aux(state, force_aux_fn, aux, masses,
+                                temperature, n_steps, rngs, max_steps: int,
+                                dt: float = 5e-4, gamma: float = 5.0,
+                                box: float = 0.0):
+    """:func:`propagate_replica_major` for force fields that carry
+    auxiliary state through the step loop (the sparse nonbonded path's
+    neighbor list: ``force_aux_fn(pos, aux) -> (force, aux)`` runs the
+    skin check / conditional rebuild before every evaluation).
+
+    Same iteration count, same noise indexing, same masked BAOAB update
+    (:func:`_baoab_apply`) — the aux carry is the only difference, so an
+    aux-free ``force_aux_fn`` reproduces :func:`propagate_replica_major`
+    exactly.  Returns ({"pos", "vel"}, aux).
     """
     noise = stacked_step_noise(rngs, max_steps + 1, state["pos"].shape[1:])
 
     def body(i, carry):
-        pos, vel = carry
-        return baoab_fused_iteration(i, pos, vel, noise[i], force_fn,
-                                     masses, temperature, n_steps,
-                                     max_steps, dt, gamma, box=box)
+        pos, vel, aux = carry
+        f, aux = force_aux_fn(pos, aux)
+        pos, vel = _baoab_apply(i, pos, vel, f, noise[i], masses,
+                                temperature, n_steps, max_steps, dt,
+                                gamma, box)
+        return pos, vel, aux
 
-    pos, vel = jax.lax.fori_loop(0, max_steps + 1, body,
-                                 (state["pos"], state["vel"]))
-    return {"pos": pos, "vel": vel}
+    pos, vel, aux = jax.lax.fori_loop(
+        0, max_steps + 1, body, (state["pos"], state["vel"], aux))
+    return {"pos": pos, "vel": vel}, aux
 
 
 def stacked_step_noise(rngs, max_steps: int, shape) -> jax.Array:

@@ -1,0 +1,358 @@
+"""Fixed-capacity neighbor lists for the sparse nonbonded path.
+
+A neighbor list replaces the dense (R, N, N) pairwise sweep with a
+padded (R, N, K_max) index table: each atom stores the indices of every
+atom within ``r_list = cutoff + skin`` (exclusions already removed), a
+validity mask, and the positions at build time.  Forces/energies then
+cost O(N * K_max) per step instead of O(N^2), and the list stays valid
+until some atom drifts more than ``skin / 2`` from its build-time
+position (two atoms closing from opposite sides each budget half the
+skin) — the classic Verlet-list contract.
+
+Everything here is STATIC-SHAPED, so a neighbor list is a legal
+``lax.scan`` carry: the fused multi-cycle driver threads it through the
+cycle scan and rebuilds on device when the skin check trips.  All
+leaves carry a leading replica axis (mode-II wave reshapes, failure
+masking and ensemble checkpoints treat the list exactly like positions).
+
+Two builds produce identical neighbor SETS (pinned by
+tests/test_neighbor_list.py):
+
+  ``build_dense``  — masked O(N^2) distance pass; the reference oracle
+                     and the fast path for small N.
+  ``build_cells``  — the scalable cell-list build: atoms are binned
+                     into a static G_x x G_y x G_z grid of cells of
+                     width >= r_list (27-cell stencil candidates), so
+                     the candidate set per atom is O(density * r_list^3)
+                     instead of O(N).  Cell geometry adapts per replica
+                     (dynamic bounding box, cells widen as needed);
+                     coordinates are clipped into the static grid, which
+                     only merges cells and therefore never loses a pair.
+
+Capacity overflows (more true neighbors than ``k_max``, or more atoms
+in a cell than ``cell_capacity``) are NEVER silent: the dropped-pair
+count accumulates in ``overflow`` and the engines surface it as a
+per-cycle driver stat (``nb_overflow``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# A neighbor list is a plain dict pytree (engine state must be a pytree
+# of arrays with leading replica axis):
+#   idx      (R, N, K) int32  — neighbor atom indices, padded with N
+#   valid    (R, N, K) f32    — 1.0 for real neighbors, 0.0 for padding
+#   ref_pos  (R, N, 3) f32    — positions at build time (skin check)
+#   overflow (R,)      int32  — cumulative count of DROPPED pairs
+#   rebuilds (R,)      int32  — cumulative rebuild count per replica
+NeighborList = Dict[str, jax.Array]
+
+
+def _pack_rows(within: jax.Array, k_max: int
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(..., N, C) candidate membership -> padded (..., N, K) indices.
+
+    ``within[..., i, c]`` marks candidate column ``c`` a true neighbor of
+    atom i; the first ``k_max`` True columns (ascending column order)
+    become the list.  Compaction is cumsum + batched binary search —
+    slot s holds the column where the running True-count first reaches
+    s + 1 — because the obvious alternatives are XLA-CPU hazards: a
+    stable argsort over the candidate axis costs tens of ms at
+    N = 256 (generic comparator sort), and a scatter lowers to a serial
+    loop (the ``.at[].add`` lesson).  O(N * K * log C), fully
+    vectorized.  Returns (cols, valid, n_dropped) where ``cols`` indexes
+    the CANDIDATE axis (the caller maps it back to atom indices).
+    """
+    count = jnp.sum(within, axis=-1)                       # (..., N)
+    csum = jnp.cumsum(within.astype(jnp.int32), axis=-1)   # (..., N, C)
+    ranks = jnp.arange(1, k_max + 1)
+
+    def row(cs):
+        return jnp.searchsorted(cs, ranks, side="left")
+
+    for _ in range(within.ndim - 1):
+        row = jax.vmap(row)
+    cols = jnp.minimum(row(csum), within.shape[-1] - 1)    # (..., N, K)
+    valid = (jnp.arange(k_max) < count[..., None]).astype(jnp.float32)
+    dropped = jnp.sum(jnp.maximum(count - k_max, 0), axis=-1)  # (...,)
+    return cols, valid, dropped
+
+
+def build_dense(pos: jax.Array, nb_mask: jax.Array, r_list: float,
+                k_max: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Masked O(N^2) build: (R, N, 3) -> (idx, valid, dropped).
+
+    ``nb_mask`` (N, N) is the interaction mask (0 on the diagonal and on
+    excluded 1-2/1-3 pairs) — exclusions are pruned at build time so the
+    force pass never needs the dense mask.  The list is two-sided (j in
+    list(i) iff i in list(j)): forces need no scatter, energies halve.
+    """
+    n = pos.shape[-2]
+    x, y, z = pos[..., 0], pos[..., 1], pos[..., 2]
+    dx = x[..., :, None] - x[..., None, :]
+    dy = y[..., :, None] - y[..., None, :]
+    dz = z[..., :, None] - z[..., None, :]
+    r2 = dx * dx + dy * dy + dz * dz
+    within = (r2 <= r_list * r_list) & (nb_mask > 0)
+    cols, valid, dropped = _pack_rows(within, k_max)
+    # candidate axis == atom axis for the dense build; pad with N
+    idx = jnp.where(valid > 0, cols, n).astype(jnp.int32)
+    return idx, valid, dropped.astype(jnp.int32)
+
+
+# -- cell-list build -------------------------------------------------------
+
+
+def _stencil(grid_dims: Tuple[int, int, int]) -> np.ndarray:
+    """Neighbor-cell offsets, pruned STATICALLY for degenerate axes: an
+    axis with one cell has no +-1 neighbors, so a (16, 1, 1) chain grid
+    searches 3 cells, not 27 — the candidate width (and the gather
+    work) shrinks with the grid's true dimensionality."""
+    axes = [(-1, 0, 1) if g > 1 else (0,) for g in grid_dims]
+    return np.array([(i, j, k)
+                     for i in axes[0]
+                     for j in axes[1]
+                     for k in axes[2]], np.int32)          # (S, 3)
+
+
+def _cell_coords(pos: jax.Array, r_list: float,
+                 grid_dims: Tuple[int, int, int]
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Per-atom integer cell coordinates on the static grid.
+
+    Cell width is ``max(r_list, extent / G)`` per axis (dynamic, per
+    configuration): wide enough that any pair within ``r_list`` sits in
+    adjacent cells, and wide enough that the dynamic bounding box fits
+    the static grid.  Out-of-range coordinates are clipped — clipping is
+    a contraction (|clip a - clip b| <= |a - b|), so adjacent-cell
+    candidacy is preserved; it only merges border cells.
+    """
+    g = jnp.asarray(grid_dims, jnp.float32)
+    lo = jnp.min(pos, axis=-2, keepdims=True)
+    hi = jnp.max(pos, axis=-2, keepdims=True)
+    width = jnp.maximum((hi - lo) / g, r_list)             # (..., 1, 3)
+    cc = jnp.floor((pos - lo) / width).astype(jnp.int32)
+    return jnp.clip(cc, 0, jnp.asarray(grid_dims, jnp.int32) - 1)
+
+
+def _bin_atoms(cell_id: jax.Array, n_cells: int, capacity: int
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Scatter atoms into per-cell slots: (N,) ids -> (n_cells+1, C).
+
+    Slot rank within a cell comes from a stable sort (rank = position
+    among same-cell atoms); ranks beyond ``capacity`` are dropped and
+    counted.  Row ``n_cells`` stays all-padding — the gather target for
+    out-of-stencil / duplicate cells.
+    """
+    n = cell_id.shape[0]
+    order = jnp.argsort(cell_id, stable=True)              # (N,)
+    sorted_id = cell_id[order]
+    first = jnp.searchsorted(sorted_id, sorted_id, side="left")
+    rank = jnp.arange(n) - first
+    flat = jnp.where(rank < capacity,
+                     sorted_id * capacity + rank,
+                     (n_cells + 1) * capacity)             # dropped
+    bins = jnp.full(((n_cells + 1) * capacity,), n, jnp.int32)
+    bins = bins.at[flat].set(order.astype(jnp.int32), mode="drop")
+    n_dropped = jnp.sum(rank >= capacity)
+    return bins.reshape(n_cells + 1, capacity), n_dropped
+
+
+def _cell_candidates(pos: jax.Array, r_list: float,
+                     grid_dims: Tuple[int, int, int], capacity: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Single-configuration candidate gather: (N, 3) -> (N, S*C)."""
+    gx, gy, gz = grid_dims
+    n_cells = gx * gy * gz
+    stencil = _stencil(grid_dims)
+    n_st = stencil.shape[0]
+    cc = _cell_coords(pos, r_list, grid_dims)              # (N, 3)
+    cell_id = (cc[:, 0] * gy + cc[:, 1]) * gz + cc[:, 2]
+    bins, bin_dropped = _bin_atoms(cell_id, n_cells, capacity)
+
+    ncc = cc[:, None, :] + stencil[None, :, :]             # (N, S, 3)
+    in_grid = jnp.all(
+        (ncc >= 0) & (ncc < jnp.asarray(grid_dims, jnp.int32)), axis=-1)
+    ncc = jnp.clip(ncc, 0, jnp.asarray(grid_dims, jnp.int32) - 1)
+    nid = (ncc[..., 0] * gy + ncc[..., 1]) * gz + ncc[..., 2]
+    nid = jnp.where(in_grid, nid, n_cells)                 # padding row
+    # dedupe stencil cells (clipping can alias border offsets): keep the
+    # FIRST occurrence of each cell id; later duplicates gather padding
+    # (out-of-grid slots are already padding, so deduping them is inert)
+    ar = jnp.arange(n_st)
+    dup = jnp.any((nid[:, :, None] == nid[:, None, :])
+                  & (ar[None, None, :] < ar[None, :, None]), axis=-1)
+    nid = jnp.where(~dup, nid, n_cells)
+    cand = bins[nid]                                       # (N, S, C)
+    return cand.reshape(pos.shape[0], -1), bin_dropped
+
+
+def build_cells(pos: jax.Array, nb_mask: jax.Array, r_list: float,
+                k_max: int, grid_dims: Tuple[int, int, int],
+                cell_capacity: int
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Cell-list build: (R, N, 3) -> (idx, valid, dropped).
+
+    Same output contract as :func:`build_dense` (identical neighbor
+    sets; per-row index order may differ).  ``dropped`` counts BOTH
+    cell-capacity and k_max overflow — every dropped pair is recorded.
+    """
+    n = pos.shape[-2]
+
+    def one(p):
+        cand, bin_dropped = _cell_candidates(p, r_list, grid_dims,
+                                             cell_capacity)
+        c = jnp.clip(cand, 0, n - 1)
+        disp = p[:, None, :] - p[c]                        # (N, 27C, 3)
+        r2 = jnp.sum(disp * disp, axis=-1)
+        mask_g = nb_mask[jnp.arange(n)[:, None], c]
+        within = ((r2 <= r_list * r_list) & (mask_g > 0)
+                  & (cand < n))
+        cols, valid, dropped = _pack_rows(within, k_max)
+        idx = jnp.where(valid > 0,
+                        jnp.take_along_axis(cand, cols, axis=-1), n)
+        # a cell-capacity drop loses that atom from EVERY stencil it
+        # would appear in; count it once per dropped atom as a floor
+        return idx.astype(jnp.int32), valid, \
+            (dropped + bin_dropped).astype(jnp.int32)
+
+    return jax.vmap(one)(pos)
+
+
+# -- public API ------------------------------------------------------------
+
+
+def build_neighbor_list(pos: jax.Array, nb_mask: jax.Array, r_list: float,
+                        k_max: int, *, method: str = "dense",
+                        grid_dims: Tuple[int, int, int] = (1, 1, 1),
+                        cell_capacity: int = 8,
+                        prev: NeighborList = None) -> NeighborList:
+    """Build a fresh neighbor list for a (R, N, 3) stack.
+
+    ``prev`` carries the cumulative overflow/rebuild counters forward
+    (pass the outgoing list on a rebuild; None zeroes them).
+    """
+    if method == "cell":
+        idx, valid, dropped = build_cells(pos, nb_mask, r_list, k_max,
+                                          grid_dims, cell_capacity)
+    elif method == "dense":
+        idx, valid, dropped = build_dense(pos, nb_mask, r_list, k_max)
+    else:
+        raise ValueError(f"unknown neighbor-list build method {method!r}")
+    r = pos.shape[0]
+    overflow = dropped
+    rebuilds = jnp.zeros(r, jnp.int32)
+    if prev is not None:
+        overflow = overflow + prev["overflow"]
+        rebuilds = prev["rebuilds"]
+    return {"idx": idx, "valid": valid, "ref_pos": pos,
+            "overflow": overflow, "rebuilds": rebuilds}
+
+
+def needs_rebuild(pos: jax.Array, nlist: NeighborList, skin: float
+                  ) -> jax.Array:
+    """(R,) bool: some atom drifted further than ``skin / 2`` since the
+    build — that replica's list may be missing pairs next step."""
+    d = pos - nlist["ref_pos"]
+    drift2 = jnp.sum(d * d, axis=-1)                       # (R, N)
+    return jnp.max(drift2, axis=-1) > (0.5 * skin) ** 2
+
+
+def maybe_rebuild(pos: jax.Array, nlist: NeighborList, nb_mask: jax.Array,
+                  r_list: float, skin: float, k_max: int, *,
+                  method: str = "dense",
+                  grid_dims: Tuple[int, int, int] = (1, 1, 1),
+                  cell_capacity: int = 8,
+                  sync: bool = False) -> NeighborList:
+    """Skin check + conditional on-device rebuild (scan-body safe).
+
+    The O(N * candidates) build runs under a ``lax.cond`` on the scalar
+    any-replica predicate — a no-drift step pays only the (R, N) drift
+    reduction.  Two refresh policies:
+
+    ``sync=False`` (lazy): each replica KEEPS its old list unless its
+    own drift tripped (per-replica select) — minimal per-replica
+    rebuild counts, skin budgets stay independent.
+
+    ``sync=True`` (collective): one tripped replica refreshes EVERYONE.
+    The batched build computes every replica's list per event either
+    way — the lazy policy merely discards the fresh lists of
+    non-trippers, which staggers their future trips into SEPARATE build
+    events; syncing the budgets collapses those into one event per
+    ensemble drift period (up to R x fewer builds for similar drift
+    rates).  The propagate hot loop uses this policy.
+    """
+    need = needs_rebuild(pos, nlist, skin)                 # (R,)
+    take = jnp.ones_like(need) if sync else need
+
+    def rebuild(args):
+        pos, nlist = args
+        fresh = build_neighbor_list(pos, nb_mask, r_list, k_max,
+                                    method=method, grid_dims=grid_dims,
+                                    cell_capacity=cell_capacity,
+                                    prev=nlist)
+
+        def sel(new, old):
+            shape = (take.shape[0],) + (1,) * (new.ndim - 1)
+            return jnp.where(take.reshape(shape), new, old)
+
+        out = jax.tree.map(sel, fresh, nlist)
+        out["rebuilds"] = nlist["rebuilds"] + take.astype(jnp.int32)
+        return out
+
+    return jax.lax.cond(jnp.any(need), rebuild, lambda a: a[1],
+                        (pos, nlist))
+
+
+def suggest_grid_dims(extent: np.ndarray, r_list: float,
+                      max_cells_axis: int = 16) -> Tuple[int, int, int]:
+    """Static cell-grid dims from a host-side extent estimate.
+
+    One cell per ``r_list`` of extent, clamped to [1, max_cells_axis]
+    per axis: the dynamic per-replica cell width only ever WIDENS from
+    ``r_list`` (never narrows), so an underestimated extent stays
+    correct — it just prunes less.
+    """
+    dims = np.maximum(1, np.minimum(
+        np.ceil(np.asarray(extent, np.float64) / max(r_list, 1e-6)),
+        max_cells_axis)).astype(int)
+    return int(dims[0]), int(dims[1]), int(dims[2])
+
+
+def suggest_cell_capacity(positions: np.ndarray, r_list: float,
+                          grid_dims: Tuple[int, int, int],
+                          safety: float = 4.0) -> int:
+    """Host-side per-cell capacity heuristic: peak occupancy of the
+    reference configuration binned with the same geometry the device
+    build uses, times a safety factor (clamped to [8, N])."""
+    p = np.asarray(positions, np.float64)
+    g = np.asarray(grid_dims, np.float64)
+    lo, hi = p.min(0), p.max(0)
+    width = np.maximum((hi - lo) / g, max(r_list, 1e-6))
+    cc = np.clip(np.floor((p - lo) / width).astype(int), 0,
+                 np.asarray(grid_dims) - 1)
+    ids = (cc[:, 0] * grid_dims[1] + cc[:, 1]) * grid_dims[2] + cc[:, 2]
+    peak = int(np.bincount(ids).max())
+    return int(np.clip(int(np.ceil(peak * safety)), 8, p.shape[0]))
+
+
+def suggest_k_max(n_atoms: int, positions: np.ndarray, nb_mask: np.ndarray,
+                  r_list: float, safety: float = 1.5) -> int:
+    """Host-side K_max heuristic: max neighbor count of a reference
+    configuration times a safety margin (thermal fluctuation + the mild
+    compaction a weakly-attractive chain sees at equilibrium; measured
+    ~10 % over the extended-chain count at 300 K).  Clamped to
+    [8, n_atoms - 1]; K_max directly scales the per-step sweep, so the
+    margin is deliberately tight — overflow is recorded at runtime
+    (``nb_overflow``), so an undersized guess is observable, not
+    silent."""
+    p = np.asarray(positions, np.float64)
+    d2 = np.sum((p[:, None, :] - p[None, :, :]) ** 2, axis=-1)
+    within = (d2 <= r_list * r_list) & (np.asarray(nb_mask) > 0)
+    base = int(within.sum(axis=1).max())
+    return int(np.clip(int(np.ceil(base * safety)), 8,
+                       max(n_atoms - 1, 8)))

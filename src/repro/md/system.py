@@ -99,12 +99,23 @@ def chain_molecule(n_atoms: int = 22, seed: int = 0) -> MolecularSystem:
     )
 
 
-def initial_positions(system: MolecularSystem, rng_key, jitter: float = 0.1):
-    """Extended-chain start + small jitter (per replica)."""
-    import jax
+def base_positions(system: MolecularSystem) -> np.ndarray:
+    """The deterministic extended-chain geometry (host numpy).
+
+    Shared by :func:`initial_positions` (which adds per-replica jitter)
+    and by host-side neighbor-list sizing: the sparse path estimates its
+    static cell-grid dims and K_max capacity from this reference
+    configuration (see ``repro.md.neighbors``)."""
     n = system.n_atoms
     base = np.zeros((n, 3), np.float32)
     base[:, 0] = np.arange(n) * 1.45
     base[:, 1] = (np.arange(n) % 2) * 0.6
+    return base
+
+
+def initial_positions(system: MolecularSystem, rng_key, jitter: float = 0.1):
+    """Extended-chain start + small jitter (per replica)."""
+    import jax
+    n = system.n_atoms
     noise = jax.random.normal(rng_key, (n, 3)) * jitter
-    return jnp.asarray(base) + noise
+    return jnp.asarray(base_positions(system)) + noise

@@ -1,0 +1,325 @@
+"""Sparse neighbor-list nonbonded path vs the dense oracle.
+
+Pins the three contracts of ``MDEngine(nonbonded="sparse")``:
+
+  * EQUIVALENCE — the cell-list build produces the same neighbor SETS
+    as the masked O(N^2) reference build; sparse forces/energies match
+    the dense pass with a matched radial cutoff to float tolerance; and
+    with K_max capturing every pair (huge cutoff), full ``run_fused``
+    trajectories make bitwise-identical exchange decisions to the dense
+    default.
+  * REBUILD CORRECTNESS — a replica whose atoms drift past ``skin / 2``
+    gets a fresh list (reference positions reset, counter bumped); one
+    that stays inside the skin keeps its list untouched.
+  * OVERFLOW VISIBILITY — lists over capacity record every dropped pair
+    and the driver surfaces the count as the per-cycle ``nb_overflow``
+    stat; truncation is never silent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import RepExConfig
+from repro.core import REMDDriver
+from repro.kernels.lj_forces import ops as nb_ops
+from repro.kernels.lj_forces import ref as nb_ref
+from repro.md import MDEngine
+from repro.md import neighbors as NB
+from repro.md.system import chain_molecule, initial_positions
+
+CUTOFF, SKIN = 8.0, 1.5
+R_LIST = CUTOFF + SKIN
+
+
+def _chain_stack(n_atoms=22, n_rep=4):
+    sys_ = chain_molecule(n_atoms)
+    pos = jnp.stack([initial_positions(sys_, jax.random.key(i))
+                     for i in range(n_rep)])
+    return sys_, pos
+
+
+def _neighbor_sets(idx, valid):
+    idx, valid = np.asarray(idx), np.asarray(valid)
+    return [[frozenset(int(j) for j, v in zip(idx[r, i], valid[r, i])
+                       if v > 0) for i in range(idx.shape[1])]
+            for r in range(idx.shape[0])]
+
+
+# -- build equivalence -----------------------------------------------------
+
+
+@pytest.mark.parametrize("grid_dims,capacity", [
+    ((1, 1, 1), 50), ((2, 2, 2), 50), ((3, 3, 3), 50), ((5, 4, 3), 32),
+])
+def test_cell_build_matches_dense_build_gas(grid_dims, capacity):
+    """Random-gas configurations: identical neighbor sets whatever the
+    (static) cell-grid geometry — clipping/dedup at the borders must
+    never lose or duplicate a pair."""
+    pos = jax.random.uniform(jax.random.key(0), (2, 50, 3)) * 12.0
+    mask = jnp.ones((50, 50)) - jnp.eye(50)
+    i_d, v_d, d_d = NB.build_dense(pos, mask, 4.0, 49)
+    i_c, v_c, d_c = NB.build_cells(pos, mask, 4.0, 49, grid_dims, capacity)
+    assert _neighbor_sets(i_d, v_d) == _neighbor_sets(i_c, v_c)
+    np.testing.assert_array_equal(np.asarray(d_d), 0)
+    np.testing.assert_array_equal(np.asarray(d_c), 0)
+
+
+def test_cell_build_matches_dense_build_chain():
+    """Chain geometry with exclusions: the build prunes 1-2/1-3 pairs."""
+    sys_, pos = _chain_stack(40)
+    gd = NB.suggest_grid_dims(np.array([40 * 1.45, 8.0, 8.0]), R_LIST)
+    i_d, v_d, _ = NB.build_dense(pos, sys_.nb_mask, R_LIST, 39)
+    i_c, v_c, _ = NB.build_cells(pos, sys_.nb_mask, R_LIST, 39, gd, 24)
+    sets_d = _neighbor_sets(i_d, v_d)
+    assert sets_d == _neighbor_sets(i_c, v_c)
+    # exclusions pruned: bonded/angle partners never appear
+    for i, j in np.asarray(sys_.bonds):
+        assert int(j) not in sets_d[0][int(i)]
+
+
+def test_neighbor_lists_are_two_sided():
+    sys_, pos = _chain_stack(30)
+    nl = NB.build_neighbor_list(pos, sys_.nb_mask, R_LIST, 29)
+    sets = _neighbor_sets(nl["idx"], nl["valid"])
+    for r in range(len(sets)):
+        for i in range(30):
+            for j in sets[r][i]:
+                assert i in sets[r][j]
+
+
+# -- force / energy equivalence --------------------------------------------
+
+
+def test_sparse_matches_dense_cutoff_oracle():
+    """Matched cutoff: the O(N * K) sweep equals the dense truncated
+    pass to float tolerance (same physics, different summation)."""
+    sys_, pos = _chain_stack()
+    nl = NB.build_neighbor_list(pos, sys_.nb_mask, R_LIST, 21)
+    out_s = nb_ref.nonbonded_sparse(pos, sys_.lj_sigma, sys_.lj_eps,
+                                    sys_.charges, nl["idx"], nl["valid"],
+                                    CUTOFF)
+    out_d = nb_ref.nonbonded_cutoff(pos, sys_.lj_sigma, sys_.lj_eps,
+                                    sys_.charges, sys_.nb_mask, CUTOFF)
+    for got, want, name in zip(out_s, out_d,
+                               ("f_lj", "f_el", "e_lj", "e_el")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=1e-4, err_msg=name)
+
+
+def test_sparse_full_capacity_matches_untruncated_dense():
+    """Huge cutoff + K_max = N - 1: the sparse pass IS the dense pass."""
+    sys_, pos = _chain_stack()
+    nl = NB.build_neighbor_list(pos, sys_.nb_mask, 1e6, 21)
+    np.testing.assert_array_equal(np.asarray(nl["overflow"]), 0)
+    out_s = nb_ref.nonbonded_sparse(pos, sys_.lj_sigma, sys_.lj_eps,
+                                    sys_.charges, nl["idx"], nl["valid"],
+                                    1e6)
+    out_d = nb_ref.nonbonded(pos, sys_.lj_sigma, sys_.lj_eps,
+                             sys_.charges, sys_.nb_mask)
+    for got, want, name in zip(out_s, out_d,
+                               ("f_lj", "f_el", "e_lj", "e_el")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=1e-4, err_msg=name)
+
+
+def test_sparse_pallas_kernel_interpret_vs_ref():
+    """The replica-grid one-hot-gather kernel vs the jnp sparse oracle
+    (forces, both energies, and the salt-folded combined force)."""
+    sys_, pos = _chain_stack()
+    nl = NB.build_neighbor_list(pos, sys_.nb_mask, R_LIST, 12)
+    args = (pos, sys_.lj_sigma, sys_.lj_eps, sys_.charges,
+            nl["idx"], nl["valid"], CUTOFF)
+    out_r = nb_ref.nonbonded_sparse(*args)
+    out_k = nb_ops.nonbonded_sparse(*args, use_kernel=True, interpret=True)
+    for got, want, name in zip(out_k, out_r,
+                               ("f_lj", "f_el", "e_lj", "e_el")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=1e-4, err_msg=name)
+    salt = jnp.asarray([0.9, 1.0, 0.5, 0.2])
+    f_r = nb_ref.nonbonded_force_sparse(*args, salt_scale=salt)
+    f_k = nb_ops.nonbonded_force_sparse(*args, salt_scale=salt,
+                                        use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_r),
+                               rtol=2e-5, atol=1e-4)
+
+
+# -- engine-level equivalence ----------------------------------------------
+
+
+DIMS = (("temperature", 2), ("umbrella", 2), ("salt", 2))
+
+
+@pytest.mark.parametrize("dims", [(("temperature", 4),), DIMS])
+def test_run_fused_sparse_vs_dense_bitwise_decisions(dims):
+    """K_max capturing all pairs: the sparse engine's ``run_fused``
+    makes exchange decisions BITWISE-identical to the dense default
+    (positions agree to float tolerance; the discrete RE trajectory is
+    identical)."""
+    cfg = RepExConfig(dimensions=dims, md_steps_per_cycle=3, n_cycles=6)
+    d_dense = REMDDriver(MDEngine(), cfg)
+    d_sparse = REMDDriver(MDEngine(nonbonded="sparse", cutoff=1e3,
+                                   k_max=21), cfg)
+    ens_d = d_dense.run_fused(d_dense.init(), chunk_cycles=3)
+    ens_s = d_sparse.run_fused(d_sparse.init(), chunk_cycles=3)
+    np.testing.assert_array_equal(np.asarray(ens_d.assignment),
+                                  np.asarray(ens_s.assignment))
+    assert d_dense.acceptance == d_sparse.acceptance
+    for h_d, h_s in zip(d_dense.history, d_sparse.history):
+        for key in ("cycle", "dim", "accept", "attempt", "failed"):
+            assert h_d[key] == h_s[key], key
+        np.testing.assert_array_equal(h_d["assignment"], h_s["assignment"])
+    np.testing.assert_allclose(np.asarray(ens_d.state["pos"]),
+                               np.asarray(ens_s.state["pos"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_truncated_potential_is_consistent():
+    """At a REAL (truncating) cutoff the sparse engine simulates the
+    truncated potential everywhere: its exchange energies equal the
+    dense cutoff oracle's reduced energies on the same states."""
+    from repro.md import energy as E
+    cfg = RepExConfig(dimensions=(("temperature", 4),),
+                      md_steps_per_cycle=3, n_cycles=4)
+    eng = MDEngine(nonbonded="sparse", cutoff=CUTOFF, skin=SKIN, k_max=21)
+    drv = REMDDriver(eng, cfg)
+    ens = drv.run_fused(drv.init(), chunk_cycles=2)
+    state = ens.state
+    f_sparse = eng.replica_features(state)
+    # oracle: dense bonded terms + dense cutoff pair sums
+    e_bonded, phi, psi = E._batched_bonded_terms(state["pos"], eng.system)
+    _, _, e_lj, e_el = nb_ref.nonbonded_cutoff(
+        state["pos"], eng.system.lj_sigma, eng.system.lj_eps,
+        eng.system.charges, eng.system.nb_mask, CUTOFF)
+    np.testing.assert_allclose(np.asarray(f_sparse["u_base"]),
+                               np.asarray(e_bonded + e_lj),
+                               rtol=2e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(f_sparse["u_elec"]),
+                               np.asarray(e_el), rtol=2e-5, atol=1e-3)
+
+
+# -- rebuild triggering ----------------------------------------------------
+
+
+def test_rebuild_trigger_is_per_replica():
+    """Drifting one replica past skin/2 rebuilds ITS list only: fresh
+    reference positions + counter bump for the drifter, bitwise
+    untouched list for everyone else."""
+    sys_, pos = _chain_stack()
+    nl = NB.build_neighbor_list(pos, sys_.nb_mask, R_LIST, 21)
+    moved = pos.at[1].add(SKIN)                     # replica 1 drifts
+    out = NB.maybe_rebuild(moved, nl, sys_.nb_mask, R_LIST, SKIN, 21)
+    np.testing.assert_array_equal(np.asarray(out["rebuilds"]),
+                                  [0, 1, 0, 0])
+    np.testing.assert_array_equal(np.asarray(out["ref_pos"][1]),
+                                  np.asarray(moved[1]))
+    for r in (0, 2, 3):
+        np.testing.assert_array_equal(np.asarray(out["ref_pos"][r]),
+                                      np.asarray(nl["ref_pos"][r]))
+        np.testing.assert_array_equal(np.asarray(out["idx"][r]),
+                                      np.asarray(nl["idx"][r]))
+
+
+def test_no_rebuild_inside_skin():
+    """Sub-threshold drift (< skin/2 per atom) leaves every list
+    bitwise untouched — the no-drift fast path."""
+    sys_, pos = _chain_stack()
+    nl = NB.build_neighbor_list(pos, sys_.nb_mask, R_LIST, 21)
+    nudged = pos.at[..., 0].add(0.4 * SKIN)         # |d| < skin/2
+    out = NB.maybe_rebuild(nudged, nl, sys_.nb_mask, R_LIST, SKIN, 21)
+    for k in nl:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(nl[k]))
+
+
+def test_rebuilds_fire_inside_fused_run():
+    """A tight skin makes drift trip the in-loop check: the rebuild
+    counter must advance inside ``run_fused`` (on-device rebuilds in the
+    scan body) and the run must stay finite."""
+    cfg = RepExConfig(dimensions=(("temperature", 4),),
+                      md_steps_per_cycle=10, n_cycles=8)
+    eng = MDEngine(nonbonded="sparse", cutoff=CUTOFF, skin=0.05, k_max=21)
+    drv = REMDDriver(eng, cfg)
+    ens = drv.run_fused(drv.init(), chunk_cycles=4)
+    assert float(drv.history[-1]["nb_rebuilds"]) > 0
+    assert bool(np.all(np.isfinite(np.asarray(ens.state["pos"]))))
+
+
+# -- overflow visibility ---------------------------------------------------
+
+
+def test_kmax_overflow_is_recorded_not_silent():
+    """Undersized K_max: the build must truncate AND count every dropped
+    pair; the driver surfaces the cumulative count per cycle."""
+    sys_, pos = _chain_stack()
+    nl = NB.build_neighbor_list(pos, sys_.nb_mask, 1e6, 4)
+    # capacity respected, drops counted
+    assert float(jnp.max(jnp.sum(nl["valid"], axis=-1))) <= 4
+    counts = jnp.sum((jnp.sum((pos[:, :, None] - pos[:, None, :]) ** 2,
+                              -1) < 1e12) & (sys_.nb_mask > 0), axis=-1)
+    expected = jnp.sum(jnp.maximum(counts - 4, 0), axis=-1)
+    np.testing.assert_array_equal(np.asarray(nl["overflow"]),
+                                  np.asarray(expected))
+
+    cfg = RepExConfig(dimensions=(("temperature", 4),),
+                      md_steps_per_cycle=3, n_cycles=4)
+    drv = REMDDriver(MDEngine(nonbonded="sparse", cutoff=1e3, k_max=4),
+                     cfg)
+    drv.run_fused(drv.init(), chunk_cycles=2)
+    assert drv.history[-1]["nb_overflow"] > 0
+    # the dense default reports a clean zero
+    drv_d = REMDDriver(MDEngine(), cfg)
+    drv_d.run_fused(drv_d.init(), chunk_cycles=2)
+    assert drv_d.history[-1]["nb_overflow"] == 0.0
+
+
+def test_nb_stats_consistent_across_run_and_fused_with_failures():
+    """``run()`` and ``run_fused()`` record the SAME per-cycle
+    nb_overflow/nb_rebuilds — both read the pre-recovery state, so a
+    replica that overflowed and then failed still reports its overflow
+    after the relaunch rewinds it."""
+    cfg = RepExConfig(dimensions=(("temperature", 4),),
+                      md_steps_per_cycle=5, n_cycles=8)
+    mk = lambda: MDEngine(nonbonded="sparse", cutoff=1e3, k_max=4,
+                          skin=0.2)                  # overflow + rebuilds
+    d1 = REMDDriver(mk(), cfg, failure_rate=0.15)
+    d2 = REMDDriver(mk(), cfg, failure_rate=0.15)
+    d1.run(d1.init())
+    d2.run_fused(d2.init(), chunk_cycles=4)
+    assert sum(h["failed"] for h in d1.history) > 0   # failures happened
+    for h1, h2 in zip(d1.history, d2.history):
+        for key in ("cycle", "failed", "nb_overflow", "nb_rebuilds"):
+            assert h1[key] == h2[key], key
+    assert d1.history[-1]["nb_overflow"] > 0
+
+
+def test_cell_capacity_overflow_is_recorded():
+    sys_, pos = _chain_stack(40)
+    gd = NB.suggest_grid_dims(np.array([40 * 1.45, 8.0, 8.0]), R_LIST)
+    _, _, dropped = NB.build_cells(pos, sys_.nb_mask, R_LIST, 39, gd, 2)
+    assert int(np.asarray(dropped).min()) > 0
+
+
+# -- configuration guards --------------------------------------------------
+
+
+def test_sparse_requires_analytic_force_path():
+    with pytest.raises(ValueError):
+        MDEngine(nonbonded="sparse", force_path="batched")
+    with pytest.raises(ValueError):
+        MDEngine(nonbonded="sparse", batched=False)
+    with pytest.raises(ValueError):
+        MDEngine(nonbonded="bogus")
+
+
+def test_sparse_defaults_are_static_and_sane():
+    eng_small = MDEngine(nonbonded="sparse")
+    assert eng_small.nlist_build == "dense"          # small N
+    assert 8 <= eng_small.k_max <= eng_small.system.n_atoms - 1
+    eng_cell = MDEngine(system=chain_molecule(96), nonbonded="sparse",
+                        nlist_build="cell")
+    assert all(g >= 1 for g in eng_cell._grid_dims)
+    assert 8 <= eng_cell._cell_capacity <= 96
+    # the cell build kicks in automatically only once N^2 dominates
+    assert MDEngine(system=chain_molecule(512),
+                    nonbonded="sparse").nlist_build == "cell"

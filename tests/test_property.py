@@ -112,6 +112,83 @@ def test_ef_compression_error_is_bounded(data, steps):
 
 
 @SETTINGS
+@given(
+    pattern=st.sampled_from(["synchronous", "asynchronous"]),
+    scheme=st.sampled_from(["neighbor", "matrix"]),
+    seed=st.integers(0, 2**30),
+)
+def test_any_cycle_preserves_permutation(pattern, scheme, seed):
+    """The assignment stays a permutation after ANY fused cycle —
+    every pattern x scheme combination, arbitrary rng."""
+    from repro.core import patterns as P
+    from repro.core.ensemble import control_multiset_ok, make_ensemble
+    from repro.md import HarmonicEngine
+
+    grid = build_grid(RepExConfig(dimensions=(("temperature", 6),)))
+    eng = HarmonicEngine()
+    ens = make_ensemble(eng, jax.random.key(seed), 6,
+                        hetero_speed=pattern == "asynchronous")
+    for _ in range(3):
+        ens, _ = P.fused_cycle(eng, grid, ens, pattern=pattern,
+                               md_steps=4, window_steps=2, scheme=scheme)
+        assert control_multiset_ok(ens)
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**30))
+def test_async_debt_invariants(seed):
+    """Asynchronous progress banking: ``debt`` never goes negative, and
+    an exchange-ready replica pays down EXACTLY ``md_steps`` — the
+    remainder banks toward its next exchange."""
+    from repro.core import patterns as P
+    from repro.core.ensemble import make_ensemble
+    from repro.md import HarmonicEngine
+
+    md_steps, window_steps = 6, 3
+    grid = build_grid(RepExConfig(dimensions=(("temperature", 6),)))
+    eng = HarmonicEngine()
+    ens = make_ensemble(eng, jax.random.key(seed), 6, hetero_speed=True)
+    for _ in range(4):
+        prev_debt = np.asarray(ens.debt)
+        n_steps = np.asarray(jnp.clip(
+            jnp.round(window_steps * ens.speed).astype(jnp.int32),
+            1, 2 * window_steps))
+        ens, _ = P.fused_cycle(eng, grid, ens, pattern="asynchronous",
+                               md_steps=md_steps,
+                               window_steps=window_steps)
+        debt = np.asarray(ens.debt)
+        ready = prev_debt + n_steps >= md_steps
+        assert np.all(debt >= 0)
+        np.testing.assert_allclose(
+            debt, prev_debt + n_steps - md_steps * ready, atol=1e-5)
+
+
+@SETTINGS
+@given(
+    shape=st.lists(st.integers(2, 5), min_size=1, max_size=3),
+    seed=st.integers(0, 2**30),
+)
+def test_deo_parity_sweeps_touch_disjoint_pairs(shape, seed):
+    """Every DEO sweep (any dim, either parity, any grid shape) proposes
+    DISJOINT pairs: no ctrl index appears twice, so the sweep's swaps
+    commute and the scatter in ``neighbor_exchange`` can never race."""
+    kinds = ["temperature", "umbrella", "salt"]
+    dims = tuple((kinds[i % 3], n) for i, n in enumerate(shape))
+    grid = build_grid(RepExConfig(dimensions=dims))
+    tab = grid.pair_table
+    for d in range(len(dims)):
+        for p in (0, 1):
+            left, right = grid.neighbor_pairs(d, p)
+            touched = np.concatenate([left, right])
+            assert len(np.unique(touched)) == len(touched)
+            # the stacked device table carries the same sweep
+            valid = tab.valid[d, p]
+            np.testing.assert_array_equal(tab.left[d, p][valid], left)
+            np.testing.assert_array_equal(tab.right[d, p][valid], right)
+            assert tab.count[d, p] == len(left)
+
+
+@SETTINGS
 @given(seed=st.integers(0, 2**30))
 def test_detailed_balance_two_level(seed):
     """2-replica, 2-temperature analytic system: empirical swap acceptance

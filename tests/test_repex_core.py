@@ -162,10 +162,47 @@ def test_auto_mode_dispatch():
     assert auto_mode(8, 16) == {"mode": "mode1", "n_waves": 1}
     assert auto_mode(16, 16) == {"mode": "mode1", "n_waves": 1}
     m = auto_mode(1000, 128)
-    assert m["mode"] == "mode2" and 1000 % m["n_waves"] == 0
-    # the paper's scenario: 10000 replicas on 128 cores
+    assert m["mode"] == "mode2" and m["n_waves"] == 8
+    # the paper's scenario: 10000 replicas on 128 cores — minimal waves
+    # even though 79 does not divide 10000 (the trailing wave pads)
     m = auto_mode(10000, 128)
-    assert m["mode"] == "mode2" and 10000 % m["n_waves"] == 0
+    assert m["mode"] == "mode2" and m["n_waves"] == 79
+
+
+def test_auto_mode_prime_replicas_regression():
+    """Regression: the old pad-free wave search walked ``n_waves`` up to
+    the next divisor of R — for a prime R just over ``slots`` that meant
+    R waves of ONE replica (13 replicas on 12 slots serialized 13x).
+    Waves are now ceil(R / slots); every wave fits in the slots."""
+    for n, slots in ((13, 12), (17, 16), (13, 7), (997, 128)):
+        m = auto_mode(n, slots)
+        assert m["mode"] == "mode2"
+        assert m["n_waves"] == -(-n // slots)
+        wave_width = -(-n // m["n_waves"])
+        assert wave_width <= slots
+        assert m["n_waves"] <= n
+
+
+def test_mode2_padded_waves_match_mode1():
+    """Non-dividing wave counts pad the trailing wave with masked no-op
+    lanes: trajectories must match Mode I exactly (prime R)."""
+    from repro.core.modes import propagate_mode1, propagate_mode2
+    from repro.core.controls import ctrl_for_assignment
+
+    engine = MDEngine()
+    n = 13
+    cfg = RepExConfig(dimensions=(("temperature", n),))
+    grid = build_grid(cfg)
+    state = engine.init_state(jax.random.key(0), n)
+    ctrl = ctrl_for_assignment(grid, jnp.arange(n))
+    n_steps = jnp.full(n, 4, jnp.int32)
+    rng = jax.random.key(42)
+    out1 = propagate_mode1(engine, state, ctrl, n_steps, rng, max_steps=4)
+    out2 = propagate_mode2(engine, state, ctrl, n_steps, rng, n_waves=2,
+                           max_steps=4)
+    for k in ("pos", "vel"):
+        np.testing.assert_allclose(np.asarray(out1[k]), np.asarray(out2[k]),
+                                   atol=1e-4)
 
 
 def test_mode1_mode2_equivalent_trajectories():
