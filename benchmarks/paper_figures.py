@@ -449,9 +449,45 @@ def neighbor_list(rows: List[str]):
         t_d, t_s = t_d * 1e6, t_s * 1e6
         rows.append(f"nlist_force_dense_N{n},{t_d:.0f},us_per_eval")
         rows.append(f"nlist_force_sparse_N{n},{t_s:.0f},"
-                    f"speedup={t_d / t_s:.2f}x;k_max={eng_s.k_max}")
+                    f"speedup={t_d / t_s:.2f}x;k_max={eng_s.k_max};"
+                    f"nlist_build={eng_s.nlist_build}")
         payload["force_pass"][str(n)] = {
-            "dense_us": t_d, "sparse_us": t_s, "k_max": eng_s.k_max}
+            "dense_us": t_d, "sparse_us": t_s, "k_max": eng_s.k_max,
+            "nlist_build": eng_s.nlist_build}
+
+    # list-BUILD cost: masked-dense O(N^2) pass vs the cell list.
+    # MEASURED RESULT (committed JSON): for this COMPACT chain geometry
+    # the cell build loses at every tested N (69x at N=256, 24x at
+    # N=1024) — adaptive cell widths give ~100 cells whose capacity
+    # grows with N, so the stencil candidate set is O(N) per atom with
+    # a worse constant than one vectorized (R, N, N) pass.  The
+    # engine's nlist_build flip-to-cell at N >= 512 is therefore wrong
+    # on CPU for dense globular systems (ROADMAP open item).
+    payload["build"] = {}
+    for n in ((64, 256) if smoke else (256, 1024)):
+        sys_ = chain(n)
+        eng_b = MDEngine(system=sys_, nonbonded="sparse")
+        pos = eng_b.init_state(jax.random.key(0), n_rep)["pos"]
+        cell = {}
+        for method in ("dense", "cell"):
+            fb = jax.jit(lambda p, m=method: NB.build_neighbor_list(
+                p, sys_.nb_mask, eng_b.r_list, eng_b.k_max, method=m,
+                grid_dims=eng_b._grid_dims,
+                cell_capacity=eng_b._cell_capacity))
+            jax.block_until_ready(fb(pos))              # compile
+            best = float("inf")
+            for _ in range(8):
+                best = min(best, _time(fb, pos, reps=reps))
+            cell[method] = best * 1e6
+        rows.append(f"nlist_build_dense_N{n},{cell['dense']:.0f},"
+                    f"us_per_build")
+        rows.append(f"nlist_build_cell_N{n},{cell['cell']:.0f},"
+                    f"speedup={cell['dense'] / cell['cell']:.2f}x;"
+                    f"k_max={eng_b.k_max}")
+        payload["build"][str(n)] = {
+            "dense_us": cell["dense"], "cell_us": cell["cell"],
+            "speedup": cell["dense"] / cell["cell"],
+            "k_max": eng_b.k_max}
 
     # fitted log-log exponents over the force sweep (clean asymptotics)
     ns = np.array([float(n) for n in force_ns])
@@ -466,8 +502,83 @@ def neighbor_list(rows: List[str]):
         json.dump(payload, f, indent=2)
 
 
+def sharded(rows: List[str]):
+    """Replica-sharded fused cycles: ``run_sharded`` over a ``("replica",)``
+    mesh vs the single-device ``run_fused`` baseline.
+
+    Sweeps shards in {1, 2, 4, 8} (clipped to visible devices and to
+    divisors of R) x chunk_cycles K, us/cycle per cell, emitted to
+    ``BENCH_sharded.json``.  On real multi-chip hardware the md_chain
+    row's T_MD drops ~1/shards while the harmonic (overhead-probe) row
+    exposes the per-cycle collective cost the sharded exchange adds —
+    Eq. (1)'s T_data moved between devices.  Under FORCED host devices
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``, the CI
+    smoke configuration) the shards are real OS threads: the sweep
+    shows genuine parallel speedup up to the machine's CORE count and
+    pure sharding overhead beyond it; the JSON records the device
+    configuration so rows are attributable.
+    ``SHARDED_SMOKE=1`` shrinks the sweep for CI.
+    """
+    import json
+    import os
+
+    from repro.launch.mesh import make_replica_mesh
+    from repro.md import HarmonicEngine
+
+    smoke = bool(os.environ.get("SHARDED_SMOKE"))
+    n_replicas = 8
+    n_cycles = 16 if smoke else 128
+    chunks = (4,) if smoke else (4, 16, 64)
+    shard_counts = [s for s in (1, 2, 4, 8)
+                    if s <= jax.device_count() and n_replicas % s == 0]
+    cfg = RepExConfig(dimensions=(("temperature", n_replicas),),
+                      md_steps_per_cycle=MD_STEPS, n_cycles=n_cycles)
+
+    def us_per_cycle(run_once, reps=3):
+        run_once()                       # compile
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            run_once()
+            best = min(best, time.perf_counter() - t0)
+        return best / n_cycles * 1e6
+
+    payload: Dict[str, Dict] = {
+        "md_steps_per_cycle": MD_STEPS, "n_replicas": n_replicas,
+        "n_cycles": n_cycles, "device_count": jax.device_count(),
+        "platform": jax.devices()[0].platform,
+        "forced_host_devices": "xla_force_host_platform_device_count"
+                               in os.environ.get("XLA_FLAGS", ""),
+        "engines": {}}
+    for name, make_engine in (("harmonic", HarmonicEngine),
+                              ("md_chain", MDEngine)):
+        eng_payload: Dict[str, Dict] = {"fused": {}, "sharded": {}}
+        for k in chunks:
+            d = REMDDriver(make_engine(), cfg)
+            e = d.init()
+            t = us_per_cycle(
+                lambda: d.run_fused(e, n_cycles=n_cycles, chunk_cycles=k))
+            eng_payload["fused"][str(k)] = t
+            rows.append(f"sharded_{name}_fused_K{k},{t:.0f},baseline")
+        for s in shard_counts:
+            mesh = make_replica_mesh(s)
+            eng_payload["sharded"][str(s)] = {}
+            for k in chunks:
+                d = REMDDriver(make_engine(), cfg)
+                e = d.init()
+                t = us_per_cycle(lambda: d.run_sharded(
+                    e, mesh=mesh, n_cycles=n_cycles, chunk_cycles=k))
+                eng_payload["sharded"][str(s)][str(k)] = t
+                base = eng_payload["fused"][str(k)]
+                rows.append(f"sharded_{name}_S{s}_K{k},{t:.0f},"
+                            f"vs_fused={base / t:.2f}x")
+        payload["engines"][name] = eng_payload
+    with open(JSON_OUT or "BENCH_sharded.json", "w") as f:
+        json.dump(payload, f, indent=2)
+
+
 ALL = [fig5_overheads, fig6_1d_weak_scaling, fig7_parallel_efficiency,
        fig8_engine_swap, fig9_mremd_weak, fig10_mremd_strong,
        fig12_multicore_replicas, fig13_async_utilization,
        table1_capabilities, xmat_exchange_scaling, cycle_fusion,
-       neighbor_list]
+       neighbor_list, sharded]

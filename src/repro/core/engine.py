@@ -65,6 +65,21 @@ class SimulationEngine(Protocol):
 #       dispatches to it when present and falls back to two ``energy``
 #       calls otherwise.
 #
+#   def replica_features(self, state) -> feature pytree (leaves (R, ...))
+#   def energy_pair_from_features(self, feats, ctrl_a, ctrl_b)
+#   def cross_energy_from_features(self, feats, ctrl_grid)
+#       The SPLIT form of the feature decomposition: ``replica_features``
+#       is the expensive state pass, the ``*_from_features`` reductions
+#       are cheap and state-free.  REQUIRED by the replica-sharded path
+#       (``REMDDriver.run_sharded``): each shard computes features for
+#       its local replicas, the small feature rows are all-gathered, and
+#       every shard runs the reduction + swap decision replicated —
+#       positions never cross devices.  ``cross_energy_from_features``
+#       is only needed for the matrix (Gibbs) scheme.  Engines should
+#       route ``energy_pair`` / ``cross_energy`` through these so the
+#       sharded and unsharded exchanges share one reduction code path
+#       (the bitwise-equivalence contract, docs/SCALING.md).
+#
 #   ctrl_keys: tuple[str, ...]
 #       The only ctrl fields the engine reads — the driver skips
 #       gathering the rest of the grid each cycle.
@@ -105,6 +120,12 @@ def engine_capabilities(engine) -> Dict[str, Any]:
         "energy_pair": callable(getattr(engine, "energy_pair", None)),
         "replica_features": callable(
             getattr(engine, "replica_features", None)),
+        # the state-free feature reductions — together with
+        # replica_features these gate run_sharded (see module docstring)
+        "energy_pair_from_features": callable(
+            getattr(engine, "energy_pair_from_features", None)),
+        "cross_energy_from_features": callable(
+            getattr(engine, "cross_energy_from_features", None)),
         # None = not declared (engine reads every ctrl field); () is a
         # legitimate declaration of "reads none" and is preserved
         "ctrl_keys": tuple(keys) if keys is not None else None,

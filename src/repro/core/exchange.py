@@ -15,6 +15,18 @@ and is computable from the per-replica potential energies alone — the
 paper's *cheap* exchange.  Umbrella/salt dimensions need the cross energies
 u_b(x_i) — the paper's *expensive* 'single-point energy' exchange (S-REMD),
 which we batch into one fused evaluation (see kernels/exchange_matrix).
+
+Synchronization contract: exchange is the ONE per-ensemble phase of a
+cycle — it reads every replica's reduced energies and failure flags and
+permutes the shared ``assignment`` vector.  Under replica sharding
+(``run_sharded``) both entry points therefore accept the cross-device
+inputs pre-gathered: ``features`` (the (R,)-per-field ctrl-independent
+feature rows — see ``SimulationEngine`` feature extensions) and ``fail``
+(the (R,) failure mask).  Only those small tensors cross devices at
+exchange time; positions never do, and the swap decision itself is then
+a replicated computation — every shard evaluates the identical
+Metropolis draws on identical inputs, which is what keeps the discrete
+trajectory bitwise-equal across mesh shapes.
 """
 from __future__ import annotations
 
@@ -60,6 +72,8 @@ def neighbor_exchange(
     parity,
     rng: jax.Array,
     ready: jax.Array = None,
+    features=None,
+    fail: jax.Array = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One DEO exchange sweep along one grid dimension.
 
@@ -73,7 +87,13 @@ def neighbor_exchange(
     ``ready`` masks replicas eligible to exchange (asynchronous pattern:
     lagging replicas sit out — their pairs are auto-rejected, which is
     exactly how async RE degrades gracefully instead of barriering).
-    Returns (new_assignment, stats).
+
+    ``features`` / ``fail``: pre-computed full-ensemble feature rows and
+    failure flags.  The sharded path passes them (all-gathered from the
+    per-shard blocks) because ``state`` there holds only the local
+    replicas; when omitted they are derived from ``state`` directly.
+    Both routes reduce features with the same engine code, so decisions
+    are bitwise identical.  Returns (new_assignment, stats).
     """
     tab = grid.pair_table
     left = jnp.asarray(tab.left)[dim_index, parity]
@@ -90,15 +110,20 @@ def neighbor_exchange(
     swapped = (assignment.at[ri].set(right, mode="drop")
                .at[rj].set(left, mode="drop"))
     ctrl_keys = getattr(engine, "ctrl_keys", None)
-    u_self, u_swap = pair_energies(
-        engine, state, ctrl_for_assignment(grid, assignment, ctrl_keys),
-        ctrl_for_assignment(grid, swapped, ctrl_keys))
+    ctrl_self = ctrl_for_assignment(grid, assignment, ctrl_keys)
+    ctrl_swap = ctrl_for_assignment(grid, swapped, ctrl_keys)
+    if features is not None:
+        u_self, u_swap = engine.energy_pair_from_features(
+            features, ctrl_self, ctrl_swap)
+    else:
+        u_self, u_swap = pair_energies(engine, state, ctrl_self, ctrl_swap)
 
     delta = (u_swap[ri] + u_swap[rj]) - (u_self[ri] + u_self[rj])
     accept = metropolis(delta, rng) & valid
     if ready is not None:
         accept = accept & ready[ri] & ready[rj]
-    fail = engine.is_failed(state)
+    if fail is None:
+        fail = engine.is_failed(state)
     accept = accept & ~fail[ri] & ~fail[rj]
 
     new_left = jnp.where(accept, right, left)
@@ -122,6 +147,8 @@ def matrix_exchange(
     assignment: jax.Array,
     rng: jax.Array,
     n_sweeps: int = 1,
+    features=None,
+    fail: jax.Array = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Gibbs-style exchange from the full cross-energy matrix.
 
@@ -130,9 +157,20 @@ def matrix_exchange(
     run ``n_sweeps`` sweeps of independent-pair Metropolis over a random
     pairing of ctrl indices — a standard generalization that mixes faster
     than nearest-neighbor DEO at the same energy-evaluation cost.
+
+    ``features`` / ``fail``: as in :func:`neighbor_exchange` — the
+    sharded path supplies the all-gathered feature rows and failure
+    flags, and the (R, C) matrix is assembled replicated from them
+    (``engine.cross_energy_from_features``).
     """
     n = assignment.shape[0]
-    u = engine.cross_energy(state, {k: v for k, v in grid.values.items()})
+    if features is not None:
+        u = engine.cross_energy_from_features(
+            features, {k: v for k, v in grid.values.items()})
+    else:
+        u = engine.cross_energy(state, {k: v for k, v in grid.values.items()})
+    if fail is None:
+        fail = engine.is_failed(state)
 
     def sweep(carry, key):
         assignment = carry
@@ -142,7 +180,6 @@ def matrix_exchange(
         ri, rj = inv[a], inv[b]
         delta = (u[ri, b] + u[rj, a]) - (u[ri, a] + u[rj, b])
         accept = metropolis(delta, jax.random.fold_in(key, 7))
-        fail = engine.is_failed(state)
         accept = accept & ~fail[ri] & ~fail[rj]
         new_a = jnp.where(accept, b, a)
         new_b = jnp.where(accept, a, b)

@@ -25,17 +25,28 @@ import jax.numpy as jnp
 from repro.core.ensemble import Ensemble
 
 
-def inject_failures(ens: Ensemble, rng: jax.Array, rate: float) -> Ensemble:
-    """Corrupt each replica's state with probability ``rate``."""
+def inject_failures(ens: Ensemble, rng: jax.Array, rate: float,
+                    axis_name=None, n_shards: int = 1) -> Ensemble:
+    """Corrupt each replica's state with probability ``rate``.
+
+    The hit mask is always drawn at full (R,) size from the replicated
+    key, so under replica sharding (``axis_name`` set, ``ens.state``
+    holding only the local block) the SAME replicas are hit as in the
+    unsharded run — each shard just applies its slice of the mask."""
+    from repro.core.modes import shard_rows
     r = ens.assignment.shape[0]
     hit = jax.random.bernoulli(rng, rate, (r,))
+    if axis_name is not None:
+        hit = shard_rows(hit, axis_name, n_shards)
+
+    n_rows = hit.shape[0]
 
     def corrupt(x):
-        if not hasattr(x, "ndim") or x.ndim < 1 or x.shape[0] != r:
+        if not hasattr(x, "ndim") or x.ndim < 1 or x.shape[0] != n_rows:
             return x
         if not jnp.issubdtype(x.dtype, jnp.floating):
             return x
-        shape = (r,) + (1,) * (x.ndim - 1)
+        shape = (n_rows,) + (1,) * (x.ndim - 1)
         return jnp.where(hit.reshape(shape), jnp.nan, x)
 
     return ens._replace(state=jax.tree.map(corrupt, ens.state))
@@ -79,6 +90,48 @@ def detect_recover(engine, ens: Ensemble, policy: str, backup_state: Any
     failed = detect(engine, ens)
     any_failed = jnp.any(failed)
     new_ens, n_failed = recover(engine, ens, failed, policy, backup_state)
+    new_backup = jax.tree.map(
+        lambda b, s: jnp.where(any_failed, b, s), backup_state,
+        new_ens.state)
+    return new_ens, new_backup, n_failed
+
+
+def detect_recover_sharded(engine, ens: Ensemble, policy: str,
+                           backup_state: Any, axis_name: str,
+                           n_shards: int) -> Tuple[Ensemble, Any, jax.Array]:
+    """:func:`detect_recover` inside a replica-sharded cycle body.
+
+    ``ens.state`` / ``backup_state`` hold only this shard's replica
+    block; ``ens.alive`` / ``ens.failures`` are replicated control
+    plane.  Detection is local, then the (R,)-bool failure mask is
+    all-gathered — the only cross-device traffic of the recovery phase
+    — so every shard agrees on ``alive``, the failure counter, and
+    whether the (local) backup freezes this cycle.  Decisions and
+    counters match the unsharded :func:`detect_recover` bitwise; the
+    state mend is a per-replica ``where`` on local rows.
+    """
+    from repro.core.modes import shard_rows
+    alive_local = shard_rows(ens.alive, axis_name, n_shards)
+    failed_local = engine.is_failed(ens.state) & alive_local
+    failed = jax.lax.all_gather(failed_local, axis_name, tiled=True)
+    any_failed = jnp.any(failed)
+    n_failed = jnp.sum(failed.astype(jnp.int32))
+
+    if policy == "continue":
+        new_ens = ens._replace(alive=ens.alive & ~failed,
+                               failures=ens.failures + n_failed)
+    else:
+        def mend(cur, bak):
+            if not hasattr(cur, "ndim") or cur.ndim < 1 \
+                    or cur.shape[0] != failed_local.shape[0]:
+                return cur
+            shape = (failed_local.shape[0],) + (1,) * (cur.ndim - 1)
+            return jnp.where(failed_local.reshape(shape), bak, cur)
+
+        state = jax.tree.map(mend, ens.state, backup_state)
+        new_ens = ens._replace(state=state,
+                               failures=ens.failures + n_failed)
+
     new_backup = jax.tree.map(
         lambda b, s: jnp.where(any_failed, b, s), backup_state,
         new_ens.state)

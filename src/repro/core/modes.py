@@ -1,6 +1,6 @@
 """Execution Modes — spatial vs temporal mapping of replicas to devices.
 
-The paper's pilot-job insight, TPU-native:
+The paper's pilot-job insight (§Execution Modes), TPU-native:
 
   Mode I  (R <= slots): all replicas propagate concurrently.  The replica
           axis is *space-multiplexed*: sharded over the mesh's data axes
@@ -15,6 +15,24 @@ The paper's pilot-job insight, TPU-native:
 Both modes wrap the SAME engine call — switching modes never touches
 engine or exchange code, which is the property the paper calls
 "execution flexibility".
+
+Composition with replica sharding (``REMDDriver.run_sharded``): under a
+``("replica",)`` mesh the SAME two functions run per shard on the LOCAL
+replica block — the mesh supplies the spatial multiplexing (Mode I
+across shards) and ``n_waves`` supplies the temporal multiplexing
+*within* each shard (Mode II waves over the shard's replicas-per-shard
+block).  The mode therefore becomes a mesh-shape policy: (n_shards,
+n_waves) = (S, 1) is pure Mode I over S devices, (1, W) is pure Mode II
+on one device, (S, W) time-multiplexes W waves on each of S devices.
+``shard_rows`` slices replicated per-replica vectors (ctrl rows, step
+counts, RNG keys) down to the local block, so per-replica inputs are
+IDENTICAL to the unsharded run and trajectories stay bitwise-equal
+per replica (see docs/SCALING.md §Bitwise-equivalence contract).
+
+Synchronization contract: ``propagate_mode1`` / ``propagate_mode2`` are
+per-replica — no replica (or wave, or shard) ever reads another's state;
+the only ensemble-wide synchronization in a cycle is the exchange phase
+(see ``repro.core.exchange``).
 """
 from __future__ import annotations
 
@@ -45,23 +63,62 @@ def shard_replicas(tree, mesh):
 
 
 def per_replica_keys(rng, n_replicas: int):
-    """Replica-indexed key assignment — INVARIANT across execution modes,
-    so Mode I and Mode II consume identical noise streams and produce
-    trajectories that agree to float reassociation (tested)."""
+    """Replica-indexed key assignment — INVARIANT across execution modes
+    AND across replica-mesh shapes: Mode I, Mode II and every
+    ``run_sharded`` mesh consume identical per-replica noise streams, so
+    trajectories agree to float reassociation across modes (tested) and
+    bitwise across mesh shapes (the sharded path computes this full key
+    array replicated and slices its local block with ``shard_rows``)."""
     return jax.random.split(rng, n_replicas)
 
 
-def propagate_mode1(engine, state, ctrl, n_steps, rng, mesh=None, *,
-                    max_steps: int = 0):
-    """All replicas concurrently (engine handles internal vmap)."""
-    keys = per_replica_keys(rng, n_steps.shape[0])
+def shard_rows(x, axis_name: str, n_shards: int):
+    """Slice a replicated per-replica array down to this shard's rows.
+
+    Inside a ``shard_map`` over ``axis_name``, control-plane vectors
+    (ctrl rows, per-replica step counts, RNG keys) are computed
+    replicated at full (R, ...) size — they are tiny — and each shard
+    takes its contiguous block of ``R // n_shards`` rows.  Computing
+    them replicated (instead of locally re-deriving) is what keeps the
+    per-replica inputs bitwise identical to the unsharded run."""
+    if n_shards == 1:
+        return x
+    n_local = x.shape[0] // n_shards
+    start = lax.axis_index(axis_name) * n_local
+    return lax.dynamic_slice_in_dim(x, start, n_local, axis=0)
+
+
+def propagate_mode1(engine, state, ctrl, n_steps, rng=None, mesh=None, *,
+                    max_steps: int = 0, keys=None):
+    """Mode I: all replicas in ``state`` propagate concurrently.
+
+    Synchronization contract: PER-REPLICA — one engine call advances
+    every replica independently; nothing crosses replica rows.  Paper
+    §Execution Modes, Mode I (spatial mapping).
+
+    ``keys`` are the per-replica PRNG keys; when omitted they are
+    derived from ``rng`` via :func:`per_replica_keys`.  Callers that
+    run on a local replica block (``run_sharded``) pass the
+    pre-sliced keys explicitly so noise streams stay replica-indexed.
+    """
+    if keys is None:
+        keys = per_replica_keys(rng, n_steps.shape[0])
     out = engine.propagate(state, ctrl, n_steps, keys, max_steps=max_steps)
     return shard_replicas(out, mesh) if mesh is not None else out
 
 
-def propagate_mode2(engine, state, ctrl, n_steps, rng, n_waves: int,
-                    mesh=None, *, max_steps: int = 0):
-    """Time-multiplexed waves: lax.map over ``n_waves`` sequential batches.
+def propagate_mode2(engine, state, ctrl, n_steps, rng=None, n_waves: int = 1,
+                    mesh=None, *, max_steps: int = 0, keys=None):
+    """Mode II: time-multiplexed waves — ``lax.map`` over ``n_waves``
+    sequential batches of the replicas in ``state`` (the pilot executing
+    a task queue in batches; paper §Execution Modes, Mode II).
+
+    Synchronization contract: PER-WAVE dispatch, PER-REPLICA physics —
+    waves serialize device occupancy but never exchange data; each
+    replica's trajectory depends only on its own row, so wave
+    membership (and therefore ``n_waves``, and whether the wave runs on
+    a full ensemble or a shard's local block) does not change any
+    replica's output bits.
 
     When ``n_waves`` does not divide R, the trailing wave is PADDED with
     idle lanes (replica 0's state replicated, ``n_steps = 0``) — every
@@ -74,7 +131,8 @@ def propagate_mode2(engine, state, ctrl, n_steps, rng, n_waves: int,
     R = n_steps.shape[0]
     W = -(-R // n_waves)
     pad = n_waves * W - R
-    keys = per_replica_keys(rng, R)
+    if keys is None:
+        keys = per_replica_keys(rng, R)
 
     def pad_rep(x):
         if pad == 0 or getattr(x, "ndim", 0) < 1 or x.shape[0] != R:
@@ -115,6 +173,10 @@ def auto_mode(n_replicas: int, slots: int) -> Dict[str, Any]:
     slots serialized 13x instead of 2x).  Non-dividing wave counts now
     pad the trailing wave with masked no-op lanes instead
     (:func:`propagate_mode2`).
+
+    Under ``run_sharded`` the returned ``n_waves`` applies PER SHARD
+    (waves over the shard's local replica block): the replica mesh is
+    the spatial resource dimension, waves the temporal one.
     """
     if slots <= 0 or n_replicas <= slots:
         return {"mode": "mode1", "n_waves": 1}

@@ -23,9 +23,25 @@ under SPMD.
   * fused path (``fused_cycle``): TRACED — derived from ``ens.cycle`` on
     device via a gather into the grid's stacked pair table, so a single
     compiled ``lax.scan`` can run K full cycles with zero host round-trips.
+
+Replica sharding (``fused_cycle(axis_name=...)``, used by
+``REMDDriver.run_sharded``): the same cycle body runs inside a
+``shard_map`` over a ``("replica",)`` mesh axis.  Synchronization
+contract per phase — propagate is PER-REPLICA and fully shard-local
+(positions/velocities/neighbor lists never leave their device); the
+exchange is the only PER-ENSEMBLE phase, and it communicates exactly two
+small tensors per cycle: the all-gathered ctrl-independent feature rows
+(O(R) floats) and the (R,) failure mask.  The swap decision is then
+computed REPLICATED on every shard from identical inputs, which keeps
+the discrete trajectory bitwise-identical to the unsharded ``run_fused``
+(docs/SCALING.md §Bitwise-equivalence contract).  Control-plane vectors
+(``assignment``, ``debt``, ``speed``, ``alive``, per-replica step counts
+and RNG keys) are computed replicated at full (R,) size and sliced to
+the local block via ``modes.shard_rows`` right before propagate.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, Tuple
 
 import jax
@@ -49,24 +65,53 @@ def _propagate(engine, ens: Ensemble, grid: ControlGrid, n_steps, rng,
                              max_steps=max_steps)
 
 
+def _propagate_sharded(engine, ens: Ensemble, grid: ControlGrid, n_steps,
+                       rng, execution: Dict[str, Any], max_steps: int,
+                       axis_name: str, n_shards: int):
+    """Per-shard propagate: ``ens.state`` holds only this shard's replica
+    block; ctrl rows, step counts and per-replica keys are computed
+    replicated (they are (R,)-small) and sliced to the block, so every
+    replica sees inputs bitwise-equal to the unsharded run.  Mode II's
+    ``n_waves`` applies to the LOCAL block — the mesh is the spatial
+    resource dimension, waves the temporal one (see ``repro.core.modes``).
+    """
+    ctrl = ctrl_for_assignment(grid, ens.assignment,
+                               getattr(engine, "ctrl_keys", None))
+    keys = M.per_replica_keys(rng, ens.assignment.shape[0])
+    sl = functools.partial(M.shard_rows, axis_name=axis_name,
+                           n_shards=n_shards)
+    ctrl = jax.tree.map(sl, ctrl)
+    if execution["mode"] == "mode2":
+        return M.propagate_mode2(engine, ens.state, ctrl, sl(n_steps),
+                                 n_waves=execution["n_waves"],
+                                 max_steps=max_steps, keys=sl(keys))
+    return M.propagate_mode1(engine, ens.state, ctrl, sl(n_steps),
+                             max_steps=max_steps, keys=sl(keys))
+
+
 def _exchange(engine, state, grid, assignment, dim_index: int, parity: int,
-              rng, scheme: str, ready=None):
+              rng, scheme: str, ready=None, features=None, fail=None):
     if scheme == "matrix":
-        return matrix_exchange(engine, state, grid, assignment, rng)
+        return matrix_exchange(engine, state, grid, assignment, rng,
+                               features=features, fail=fail)
     return neighbor_exchange(engine, state, grid, assignment, dim_index,
-                             parity, rng, ready=ready)
+                             parity, rng, ready=ready, features=features,
+                             fail=fail)
 
 
 def _cycle_core(engine, grid: ControlGrid, ens: Ensemble, *, pattern: str,
                 md_steps: int, window_steps: int, dim_index, parity,
-                scheme: str, execution, mesh
+                scheme: str, execution, mesh, axis_name=None, n_shards=1
                 ) -> Tuple[Ensemble, Dict[str, Any], jax.Array]:
     """The ONE cycle body shared by every entry point.
 
     ``dim_index``/``parity`` may be host ints (legacy per-cycle jits) or
     traced scalars (fused scan) — the exchange gathers its sweep from the
     stacked :class:`PairTable` either way, so legacy and fused execution
-    are the same trace by construction, not by manual lockstep.
+    are the same trace by construction, not by manual lockstep.  With
+    ``axis_name`` set the body runs per shard (see module docstring):
+    propagate is local, and the exchange consumes all-gathered feature
+    rows + failure flags instead of touching ``state`` directly.
     Returns (new_ens, exchange_stats, ready_mask).
     """
     k_md, k_ex, k_next = jax.random.split(ens.rng, 3)
@@ -76,24 +121,43 @@ def _cycle_core(engine, grid: ControlGrid, ens: Ensemble, *, pattern: str,
         n_steps = jnp.clip(
             jnp.round(window_steps * ens.speed).astype(jnp.int32),
             1, max_steps)
+    else:
+        max_steps = md_steps
+        n_steps = jnp.full(ens.assignment.shape, md_steps, jnp.int32)
+
+    if axis_name is None:
         state = _propagate(engine, ens, grid, n_steps, k_md, execution,
                            max_steps, mesh)
+        features = fail = None
+    else:
+        state = _propagate_sharded(engine, ens, grid, n_steps, k_md,
+                                   execution, max_steps, axis_name,
+                                   n_shards)
+        # the ONLY tensors that cross devices at exchange time: the
+        # (R,)-per-field feature rows and the (R,) failure mask —
+        # positions stay shard-local (asserted by the HLO op census in
+        # tests/test_sharded.py)
+        gather = functools.partial(jax.lax.all_gather,
+                                   axis_name=axis_name, tiled=True)
+        features = jax.tree.map(gather, engine.replica_features(state))
+        fail = gather(engine.is_failed(state))
+
+    if pattern == "asynchronous":
         debt = ens.debt + n_steps.astype(jnp.float32)
         ready = (debt >= md_steps) & ens.alive
         assignment, stats = _exchange(engine, state, grid, ens.assignment,
                                       dim_index, parity, k_ex, scheme,
-                                      ready=ready)
+                                      ready=ready, features=features,
+                                      fail=fail)
         debt = jnp.where(ready, debt - md_steps, debt)
         new_ens = ens._replace(state=state, assignment=assignment,
                                rng=k_next, cycle=ens.cycle + 1, debt=debt)
     else:
-        n_steps = jnp.full(ens.assignment.shape, md_steps, jnp.int32)
-        state = _propagate(engine, ens, grid, n_steps, k_md, execution,
-                           md_steps, mesh)
         ready = ens.alive
         assignment, stats = _exchange(engine, state, grid, ens.assignment,
                                       dim_index, parity, k_ex, scheme,
-                                      ready=ready)
+                                      ready=ready, features=features,
+                                      fail=fail)
         new_ens = ens._replace(state=state, assignment=assignment,
                                rng=k_next, cycle=ens.cycle + 1)
     return new_ens, stats, ready
@@ -104,7 +168,10 @@ def sync_cycle(engine, grid: ControlGrid, ens: Ensemble, md_steps: int,
                execution=None, mesh=None
                ) -> Tuple[Ensemble, Dict[str, Any]]:
     """One synchronous cycle: propagate-all barrier, then one exchange sweep
-    along the scheduled dimension (DEO parity)."""
+    along the scheduled dimension (DEO parity).  Paper Fig 1a.
+
+    Synchronization contract: propagate is per-replica; the exchange
+    sweep is per-ensemble (it is the barrier)."""
     execution = execution or {"mode": "mode1", "n_waves": 1}
     new_ens, stats, _ = _cycle_core(
         engine, grid, ens, pattern="synchronous", md_steps=md_steps,
@@ -117,11 +184,15 @@ def async_cycle(engine, grid: ControlGrid, ens: Ensemble, md_steps: int,
                 window_steps: int, dim_index: int, parity: int,
                 scheme: str = "neighbor", execution=None, mesh=None
                 ) -> Tuple[Ensemble, Dict[str, Any]]:
-    """One asynchronous real-time window.
+    """One asynchronous real-time window.  Paper Fig 1b.
 
     Each replica advances by its own speed; replicas whose banked progress
     reaches ``md_steps`` become ready, exchange, and bank the remainder.
-    """
+
+    Synchronization contract: propagate is per-replica (heterogeneous
+    step counts); the exchange is per-ensemble but masked — pairs with
+    an un-ready member auto-reject, so a straggler delays only its
+    ladder neighbours."""
     execution = execution or {"mode": "mode1", "n_waves": 1}
     new_ens, stats, ready = _cycle_core(
         engine, grid, ens, pattern="asynchronous", md_steps=md_steps,
@@ -135,7 +206,8 @@ def async_cycle(engine, grid: ControlGrid, ens: Ensemble, md_steps: int,
 
 def fused_cycle(engine, grid: ControlGrid, ens: Ensemble, *,
                 pattern: str, md_steps: int, window_steps: int,
-                scheme: str = "neighbor", execution=None, mesh=None
+                scheme: str = "neighbor", execution=None, mesh=None,
+                axis_name=None, n_shards: int = 1
                 ) -> Tuple[Ensemble, Dict[str, jax.Array]]:
     """One cycle with dim/parity derived ON DEVICE from ``ens.cycle``.
 
@@ -145,6 +217,13 @@ def fused_cycle(engine, grid: ControlGrid, ens: Ensemble, *,
     host-static closure args.  That makes the whole cycle a legal
     ``lax.scan`` body: K cycles compile to ONE program with zero host
     round-trips inside the chunk.
+
+    With ``axis_name`` set, the cycle body additionally runs per shard of
+    a replica mesh (the ``run_sharded`` path — see module docstring):
+    same scan-body property, but propagate touches only the local
+    replica block and the per-cycle stats are reduced across shards
+    (``lax.pmax`` on the neighbor-list counters; everything else is
+    already replicated).
 
     Returns (new_ens, stats) where stats is a FLAT dict of fixed-shape
     arrays (``dim``, ``accepted``, ``attempted``, ``ready_frac``, the
@@ -165,7 +244,8 @@ def fused_cycle(engine, grid: ControlGrid, ens: Ensemble, *,
     new_ens, stats, ready = _cycle_core(
         engine, grid, ens, pattern=pattern, md_steps=md_steps,
         window_steps=window_steps, dim_index=dim_index, parity=parity,
-        scheme=scheme, execution=execution, mesh=mesh)
+        scheme=scheme, execution=execution, mesh=mesh,
+        axis_name=axis_name, n_shards=n_shards)
     flat = {
         "dim": dim_index.astype(jnp.int32),
         "accepted": stats["accepted"],
@@ -173,7 +253,12 @@ def fused_cycle(engine, grid: ControlGrid, ens: Ensemble, *,
         "ready_frac": jnp.mean(ready.astype(jnp.float32)),
         "assignment": new_ens.assignment,
     }
-    flat.update(nb_health(engine, new_ens.state))
+    nb = nb_health(engine, new_ens.state)
+    if axis_name is not None:
+        # worst-replica counters over ALL shards (max is exact in f32,
+        # so the sharded stats match the unsharded ones bitwise)
+        nb = {k: jax.lax.pmax(v, axis_name) for k, v in nb.items()}
+    flat.update(nb)
     return new_ens, flat
 
 

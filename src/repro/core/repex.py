@@ -37,9 +37,26 @@ Two execution paths pay these terms very differently:
                    matches to XLA-fusion rounding (~1 ulp) and is
                    bitwise-invariant across chunk sizes.
 
+A third path scales the FUSED chunk across devices:
+
+``run_sharded()`` — ``run_fused`` with the replica axis block-sharded
+                   over a ``("replica",)`` mesh via ``shard_map`` (the
+                   paper's spatial Execution-Mode dimension made a mesh
+                   shape).  Propagate and feature passes are fully
+                   shard-local; the exchange all-gathers only the
+                   (R,)-per-field feature rows and the (R,) failure
+                   mask — positions never cross devices — and computes
+                   the swap decision replicated, so the discrete
+                   trajectory is bitwise-identical to ``run_fused`` on
+                   one device.  T_MD drops by ~1/n_shards while T_EX
+                   gains one tiny collective per cycle (Eq. (1)'s
+                   T_data, between devices instead of host<->device).
+                   See docs/SCALING.md.
+
 The driver supports both patterns, both execution modes, failure
 injection/recovery, and periodic ensemble checkpointing (restart-able,
-mesh-independent; the fused path checkpoints at chunk boundaries).
+mesh-independent; the fused and sharded paths checkpoint at chunk
+boundaries).
 
 Every history entry also records the post-cycle ``assignment`` row (the
 discrete RE trajectory — what the statistical-correctness suite analyses
@@ -138,6 +155,15 @@ class REMDDriver:
 
     def run(self, ens: Ensemble, n_cycles: Optional[int] = None,
             verbose: bool = False) -> Ensemble:
+        """The legacy per-cycle path: one dispatch + 4 host syncs per cycle.
+
+        Synchronization contract: propagate is per-replica (per-wave
+        under Mode II), the exchange sweep is per-ensemble, and the
+        HOST synchronizes with the device once per cycle — this path
+        pays Eq. (1)'s T_data + T_RepEx_over + T_runtime_over in full
+        every cycle (the paper's per-cycle pilot loop, §Eq. (1)).  Kept
+        as the semantics oracle for ``run_fused``/``run_sharded``.
+        """
         n_cycles = n_cycles or self.cfg.n_cycles
         n_dims = len(self.grid.dims)
         # Backup carry for relaunch recovery: a reference is enough — JAX
@@ -222,29 +248,46 @@ class REMDDriver:
 
     # -- fused multi-cycle path -------------------------------------------
 
-    def _fused_chunk_fn(self, chunk_cycles: int):
-        """Jitted scan over ``chunk_cycles`` complete cycles (cached)."""
-        key = ("fused", chunk_cycles, self.failure_rate)
-        if key in self._compiled:
-            return self._compiled[key]
+    def _chunk_scan(self, chunk_cycles: int, axis_name=None,
+                    n_shards: int = 1):
+        """The K-cycle scan body shared by the fused AND sharded paths.
+
+        ONE builder so the two paths cannot drift: the carry protocol
+        (ensemble, recovery backup, failure key), the
+        inject -> cycle -> detect/recover order, and the per-cycle ys
+        dict consumed by ``_chunk_loop`` are defined here exactly once.
+        ``axis_name=None`` is the single-mesh fused path;
+        ``axis_name="replica"`` runs the same body per shard (local
+        propagate, gathered exchange, sharded recovery).
+        """
         cfg = self.cfg
         policy = "relaunch" if cfg.relaunch_failed else "continue"
         inject = self.failure_rate > 0
         window_steps = max(int(cfg.md_steps_per_cycle * cfg.async_window), 1)
+        sharded = axis_name is not None
 
         def one_cycle(carry, _):
             ens, backup, fail_key = carry
             if inject:
                 fail_key, k = jax.random.split(fail_key)
-                ens = F.inject_failures(ens, k, self.failure_rate)
+                ens = F.inject_failures(ens, k, self.failure_rate,
+                                        axis_name=axis_name,
+                                        n_shards=n_shards)
             cyc = ens.cycle
             new_ens, stats = patterns.fused_cycle(
                 self.engine, self.grid, ens, pattern=cfg.pattern,
                 md_steps=cfg.md_steps_per_cycle,
                 window_steps=window_steps, scheme=cfg.exchange_scheme,
-                execution=self.execution, mesh=self.mesh)
-            new_ens, backup, n_failed = F.detect_recover(
-                self.engine, new_ens, policy, backup)
+                execution=self.execution,
+                mesh=None if sharded else self.mesh,
+                axis_name=axis_name, n_shards=n_shards)
+            if sharded:
+                new_ens, backup, n_failed = F.detect_recover_sharded(
+                    self.engine, new_ens, policy, backup, axis_name,
+                    n_shards)
+            else:
+                new_ens, backup, n_failed = F.detect_recover(
+                    self.engine, new_ens, policy, backup)
             ys = dict(stats, cycle=cyc, failed=n_failed)
             return (new_ens, backup, fail_key), ys
 
@@ -254,7 +297,14 @@ class REMDDriver:
                 length=chunk_cycles)
             return ens, backup, fail_key, ys
 
-        jitted = jax.jit(chunk)
+        return chunk
+
+    def _fused_chunk_fn(self, chunk_cycles: int):
+        """Jitted scan over ``chunk_cycles`` complete cycles (cached)."""
+        key = ("fused", chunk_cycles, self.failure_rate)
+        if key in self._compiled:
+            return self._compiled[key]
+        jitted = jax.jit(self._chunk_scan(chunk_cycles))
         self._compiled[key] = jitted
         return jitted
 
@@ -267,17 +317,142 @@ class REMDDriver:
         terms of Eq. (1) are paid once per chunk instead of once per cycle.
         Checkpointing happens at chunk boundaries (a chunk that crosses the
         cadence saves its final state).
+
+        Synchronization contract: identical to ``run()`` inside a cycle
+        (per-replica propagate, per-ensemble exchange); the HOST only
+        synchronizes once per K-cycle chunk.  Implements the paper's
+        overhead-amortization argument (§Eq. (1)) on a single device /
+        default mesh; ``run_sharded`` is the same chunk distributed over
+        a replica mesh.
         """
         if chunk_cycles < 1:
             raise ValueError(f"chunk_cycles must be >= 1, got {chunk_cycles}")
-        n_cycles = n_cycles or self.cfg.n_cycles
         backup = ens.state
         fail_key = jax.random.key(self.cfg.seed + 999)
+        return self._chunk_loop(ens, backup, fail_key,
+                                n_cycles or self.cfg.n_cycles, chunk_cycles,
+                                verbose, self._fused_chunk_fn)
+
+    # -- replica-sharded multi-device path --------------------------------
+
+    def _sharded_chunk_fn(self, chunk_cycles: int, mesh, ens: Ensemble):
+        """Jitted shard_map(scan) over ``chunk_cycles`` cycles (cached).
+
+        The whole K-cycle scan lives INSIDE one ``shard_map`` over the
+        mesh's ``"replica"`` axis: the carry (local state block, local
+        backup block, replicated control plane) never leaves its device
+        between cycles, and the per-cycle collectives (feature rows +
+        failure masks, see ``patterns.fused_cycle``) compile into the
+        scan body.
+        """
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.sharding import ensemble_specs
+
+        n_shards = mesh.shape["replica"]
+        # the mesh's device identity is part of the key: the jitted
+        # shard_map closes over the mesh, so two same-shaped meshes on
+        # different device sets must not share a cache entry
+        devs = tuple(d.id for d in mesh.devices.flat)
+        key = ("sharded", chunk_cycles, self.failure_rate, n_shards, devs)
+        if key in self._compiled:
+            return self._compiled[key]
+        chunk = self._chunk_scan(chunk_cycles, axis_name="replica",
+                                 n_shards=n_shards)
+        espec = ensemble_specs(ens)
+        # check_rep=False: the replicated outputs (assignment, stats, ...)
+        # come out of all_gather-fed replicated math, which shard_map's
+        # static replication checker cannot infer through lax.scan
+        body = shard_map(chunk, mesh,
+                         in_specs=(espec, espec.state, P()),
+                         out_specs=(espec, espec.state, P(), P()),
+                         check_rep=False)
+        jitted = jax.jit(body)
+        self._compiled[key] = jitted
+        return jitted
+
+    def run_sharded(self, ens: Ensemble, mesh=None,
+                    n_cycles: Optional[int] = None, chunk_cycles: int = 16,
+                    verbose: bool = False) -> Ensemble:
+        """``run_fused()`` with the replica axis sharded over a mesh.
+
+        ``mesh`` must carry a ``"replica"`` axis whose size divides the
+        replica count (``launch.mesh.make_replica_mesh``); by default the
+        largest usable device count is taken.  Each device owns a
+        contiguous block of R / n_shards replicas — the paper's spatial
+        Execution-Mode dimension (§Execution Modes) realized as a mesh
+        shape; Mode II's ``n_waves`` still time-multiplexes WITHIN each
+        shard's block (see ``repro.core.modes``).
+
+        Synchronization contract: propagate and feature passes are
+        per-replica and fully shard-local; the exchange is the one
+        per-ensemble phase and communicates exactly the all-gathered
+        feature rows + failure masks (positions never cross devices);
+        the host synchronizes once per chunk, as in ``run_fused``.
+        Discrete trajectories (assignments, acceptance, failures,
+        nb-counters) are bitwise-identical to ``run_fused`` on ANY mesh
+        shape, including the 1-shard mesh (tests/test_sharded.py pins
+        this and the no-position-gather property).
+
+        Requires the engine's split feature API (``replica_features`` +
+        ``energy_pair_from_features``; ``cross_energy_from_features``
+        for the matrix scheme) — see ``repro.core.engine``.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.launch.mesh import make_replica_mesh
+        from repro.sharding import ensemble_shardings
+
+        if chunk_cycles < 1:
+            raise ValueError(f"chunk_cycles must be >= 1, got {chunk_cycles}")
+        R = self.grid.n_ctrl
+        if mesh is None:
+            n = jax.device_count()
+            while R % n:
+                n -= 1
+            mesh = make_replica_mesh(n)
+        if "replica" not in mesh.shape:
+            raise ValueError(f"run_sharded needs a mesh with a 'replica' "
+                             f"axis, got axes {tuple(mesh.shape)}")
+        n_shards = mesh.shape["replica"]
+        if R % n_shards:
+            raise ValueError(f"replica count {R} is not divisible by the "
+                             f"mesh's {n_shards} shards")
+        caps = self.capabilities
+        needed = ["replica_features", "energy_pair_from_features"]
+        if self.cfg.exchange_scheme == "matrix":
+            needed.append("cross_energy_from_features")
+        missing = [c for c in needed if not caps[c]]
+        if missing:
+            raise TypeError(
+                f"engine {type(self.engine).__name__} lacks the feature "
+                f"API required by run_sharded: {missing} (see "
+                f"repro.core.engine optional extensions)")
+
+        ens = jax.device_put(ens, ensemble_shardings(mesh, ens))
+        backup = ens.state
+        fail_key = jax.device_put(jax.random.key(self.cfg.seed + 999),
+                                  NamedSharding(mesh, P()))
+        return self._chunk_loop(
+            ens, backup, fail_key, n_cycles or self.cfg.n_cycles,
+            chunk_cycles, verbose,
+            lambda k: self._sharded_chunk_fn(k, mesh, ens))
+
+    # -- the chunked host loop shared by run_fused / run_sharded ----------
+
+    def _chunk_loop(self, ens: Ensemble, backup, fail_key,
+                    n_cycles: int, chunk_cycles: int, verbose: bool,
+                    step_for) -> Ensemble:
+        """Drive ``step_for(k)`` chunk functions to ``n_cycles``, fetching
+        stats once per chunk and keeping ``history``/``acceptance``/
+        checkpoint bookkeeping identical across the fused and sharded
+        paths."""
         c0 = int(jax.device_get(ens.cycle))
         done = 0
         while done < n_cycles:
             k = min(chunk_cycles, n_cycles - done)
-            step = self._fused_chunk_fn(k)
+            step = step_for(k)
             t0 = time.perf_counter()
             ens, backup, fail_key, ys = step(ens, backup, fail_key)
             jax.block_until_ready(ens.assignment)

@@ -25,7 +25,7 @@ from __future__ import annotations
 import json
 import re
 from collections import defaultdict
-from typing import Dict, List, Tuple
+from typing import Any, Dict, List, Tuple
 
 DTYPE_BYTES = {"f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4,
                "f64": 8, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4,
@@ -78,6 +78,24 @@ def _parse_shapes(text: str) -> List[Tuple[str, List[int]]]:
             for dt, dims in _ONE_SHAPE.findall(text)]
 
 
+def _instructions(lines):
+    """Yield ``(name, shape_text, op, remainder)`` per instruction line.
+
+    THE one HLO-instruction tokenizer: the roofline walk, the op census
+    and the collective census all consume it, so a fix for an HLO text
+    quirk lands in every probe at once."""
+    for line in lines:
+        d = _DEF_LINE.match(line)
+        if not d:
+            continue
+        name, rest = d.group(1), _COMMENT.sub("", d.group(2))
+        shape_text, remainder = _split_shape_op(rest)
+        mop = _OP_NAME.search(remainder)
+        if not mop:
+            continue
+        yield name, shape_text, mop.group(1), remainder
+
+
 class HloCostModel:
     def __init__(self, hlo_text: str):
         self.computations: Dict[str, List[str]] = {}
@@ -114,16 +132,7 @@ class HloCostModel:
             coll_n = defaultdict(int)
             coll_narrow: Dict[str, int] = {}
             wbytes = 0
-            for line in lines:
-                d = _DEF_LINE.match(line)
-                if not d:
-                    continue
-                name, rest = d.group(1), _COMMENT.sub("", d.group(2))
-                shape_text, remainder = _split_shape_op(rest)
-                mop = _OP_NAME.search(remainder)
-                if not mop:
-                    continue
-                op = mop.group(1)
+            for name, shape_text, op, remainder in _instructions(lines):
                 out_shapes = _parse_shapes(shape_text)
                 if out_shapes:
                     shapes[name] = out_shapes[0]
@@ -256,15 +265,9 @@ def count_ops(hlo_text: str) -> Dict[str, int]:
     for comp, lines in model.computations.items():
         if model.mult.get(comp, 0.0) == 0.0 or comp in model.fused:
             continue
-        for line in lines:
-            d = _DEF_LINE.match(line)
-            if not d:
-                continue
-            _, remainder = _split_shape_op(_COMMENT.sub("", d.group(2)))
-            mop = _OP_NAME.search(remainder)
-            if not mop or mop.group(1) in _TRIVIAL_OPS:
-                continue
-            counts[mop.group(1)] += 1
+        for _name, _shape, op, _rem in _instructions(lines):
+            if op not in _TRIVIAL_OPS:
+                counts[op] += 1
     return dict(counts)
 
 
@@ -278,3 +281,38 @@ def compiled_op_count(fn, *args) -> Tuple[int, Dict[str, int]]:
     text = jax.jit(fn).lower(*args).compile().as_text()
     census = count_ops(text)
     return sum(census.values()), census
+
+
+# ---------------------------------------------------------------------------
+# Collective census (what crosses devices in a sharded program)
+# ---------------------------------------------------------------------------
+
+
+def collective_shapes(hlo_text: str) -> List[Dict[str, Any]]:
+    """Per-instruction census of collective ops in reachable computations.
+
+    Returns one entry per collective instruction:
+    ``{"op", "dtype", "dims", "bytes"}`` — the OUTPUT shape of the
+    collective, i.e. the full cross-device tensor an all-gather
+    materializes.  This is the communication contract probe for the
+    replica-sharded REMD path: tests assert every gathered tensor is a
+    small per-replica row (feature scalars, failure flags) and that no
+    (R, N, 3) position-sized tensor ever crosses devices
+    (tests/test_sharded.py).  Unlike the roofline totals this is a
+    STATIC census (no trip-count weighting) over EVERY computation in
+    the module — the contract is about which tensors cross at all, so a
+    safety probe must not skip computations the call-graph walk fails
+    to reach (e.g. ``conditional`` branch bodies, which the roofline's
+    edge regexes do not follow — the sparse path's ``lax.cond`` rebuild
+    lives in one).
+    """
+    model = HloCostModel(hlo_text)
+    out: List[Dict[str, Any]] = []
+    for lines in model.computations.values():
+        for _name, shape_text, op, _rem in _instructions(lines):
+            if op not in COLLECTIVES:
+                continue
+            for dtype, dims in _parse_shapes(shape_text):
+                out.append({"op": op, "dtype": dtype, "dims": dims,
+                            "bytes": _shape_bytes(dtype, dims)})
+    return out

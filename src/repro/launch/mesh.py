@@ -23,3 +23,24 @@ def make_test_mesh():
 
 def make_host_mesh(n_data: int = 1, n_model: int = 1):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_replica_mesh(n_shards: int = 0):
+    """1-D ``("replica",)`` mesh for replica-sharded REMD
+    (``REMDDriver.run_sharded``).
+
+    Each of the ``n_shards`` devices owns a contiguous block of
+    ``R / n_shards`` replicas; ``n_shards = 0`` (the default) uses every
+    visible device.  On CPU, export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` BEFORE jax
+    initializes to test multi-shard execution without accelerators —
+    this is how CI exercises the path (see docs/SCALING.md).
+    """
+    n_shards = n_shards or jax.device_count()
+    if n_shards > jax.device_count():
+        raise ValueError(
+            f"make_replica_mesh({n_shards}) needs {n_shards} devices but "
+            f"only {jax.device_count()} are visible (on CPU, set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+            f"jax initializes)")
+    return jax.make_mesh((n_shards,), ("replica",))

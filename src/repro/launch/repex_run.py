@@ -7,6 +7,10 @@ configuration files' usability requirement):
       --dims temperature:8 --cycles 10 --md-steps 100 --pattern async
   python -m repro.launch.repex_run --engine md \
       --dims temperature:6,umbrella:8,umbrella:8 --slots 128
+  # fused chunks / replica-sharded execution (docs/SCALING.md):
+  python -m repro.launch.repex_run --dims temperature:8 --chunk 16
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m repro.launch.repex_run --dims temperature:8 --shards 8
 """
 from __future__ import annotations
 
@@ -45,6 +49,11 @@ def main():
     ap.add_argument("--failure-rate", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="fuse K cycles per dispatch (run_fused)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="replica-shard over N devices "
+                         "(run_sharded; uses --chunk or 16)")
     args = ap.parse_args()
 
     cfg = RepExConfig(
@@ -73,7 +82,15 @@ def main():
     print(f"replicas={driver.grid.n_ctrl} execution={driver.execution} "
           f"pattern={cfg.pattern} scheme={cfg.exchange_scheme}")
     ens = driver.init()
-    ens = driver.run(ens, verbose=True)
+    if args.shards:
+        from repro.launch.mesh import make_replica_mesh
+        ens = driver.run_sharded(ens, mesh=make_replica_mesh(args.shards),
+                                 chunk_cycles=args.chunk or 16,
+                                 verbose=True)
+    elif args.chunk:
+        ens = driver.run_fused(ens, chunk_cycles=args.chunk, verbose=True)
+    else:
+        ens = driver.run(ens, verbose=True)
     print("\nmultiset ok:", control_multiset_ok(ens))
     print("acceptance:", {k: f"{v*100:.1f}%"
                           for k, v in driver.acceptance_ratios().items()})

@@ -347,12 +347,19 @@ class MDEngine:
         The O(N^2) pair sums in ``features`` are ctrl-independent, so the
         exchange phase's self/swap evaluation needs them only once; each
         ctrl assignment is then an O(1) reduction over the features."""
-        f = self.replica_features(state)
+        return self.energy_pair_from_features(self.replica_features(state),
+                                              ctrl_a, ctrl_b)
+
+    def energy_pair_from_features(self, feats, ctrl_a, ctrl_b):
+        """The ctrl reduction half of ``energy_pair`` — O(R) on the
+        (R,)-per-field feature rows, no state access.  The sharded
+        exchange path calls this on all-gathered features; ``energy_pair``
+        routes through it too, so both paths reduce identically."""
         if self.batched:
-            return (E.batched_reduced_energy_from_features(f, ctrl_a),
-                    E.batched_reduced_energy_from_features(f, ctrl_b))
+            return (E.batched_reduced_energy_from_features(feats, ctrl_a),
+                    E.batched_reduced_energy_from_features(feats, ctrl_b))
         red = jax.vmap(E.reduced_energy_from_features)
-        return red(f, ctrl_a), red(f, ctrl_b)
+        return red(feats, ctrl_a), red(feats, ctrl_b)
 
     def cross_energy(self, state, ctrl_grid):
         """(R, C) matrix u_c(x_i) via the feature decomposition.
@@ -360,15 +367,44 @@ class MDEngine:
         Features are computed once per replica (O(R N^2), one batched
         pass); matrix assembly is the tiled ``exchange_matrix`` kernel
         (jnp oracle by default)."""
+        return self.cross_energy_from_features(self.replica_features(state),
+                                               ctrl_grid)
+
+    def cross_energy_from_features(self, feats, ctrl_grid):
+        """Matrix assembly half of ``cross_energy`` (feature rows ->
+        (R, C)); state-free, so the sharded Gibbs exchange can run it
+        replicated on gathered features."""
         from repro.kernels.exchange_matrix import ops as xops
-        f = self.replica_features(state)
-        return xops.exchange_matrix(f, ctrl_grid)
+        return xops.exchange_matrix(feats, ctrl_grid)
 
     def is_failed(self, state):
         return _any_nonfinite(state)
 
 
-class HarmonicEngine:
+class _TOnlyFeatureAPI:
+    """Shared exchange reductions for T-only engines: u(x; ctrl) =
+    beta(ctrl) * U(x), so the single feature is the bare potential.
+    Subclasses provide ``replica_features(state) -> {"u": (R,)}``; this
+    mixin supplies the four reduction entry points (including the
+    state-free ``*_from_features`` forms ``run_sharded`` requires) so
+    the T-only reduction lives in exactly one place."""
+
+    def energy_pair(self, state, ctrl_a, ctrl_b):
+        return self.energy_pair_from_features(self.replica_features(state),
+                                              ctrl_a, ctrl_b)
+
+    def energy_pair_from_features(self, feats, ctrl_a, ctrl_b):
+        return ctrl_a["beta"] * feats["u"], ctrl_b["beta"] * feats["u"]
+
+    def cross_energy(self, state, ctrl_grid):
+        return self.cross_energy_from_features(self.replica_features(state),
+                                               ctrl_grid)
+
+    def cross_energy_from_features(self, feats, ctrl_grid):
+        return feats["u"][:, None] * ctrl_grid["beta"][None, :]  # (R, C)
+
+
+class HarmonicEngine(_TOnlyFeatureAPI):
     """Replicas in a 3-D harmonic well, propagated by the EXACT
     Ornstein-Uhlenbeck solution of overdamped Langevin dynamics:
 
@@ -452,19 +488,15 @@ class HarmonicEngine:
     def energy(self, state, ctrl):
         return ctrl["beta"] * self._potential_stack(state["x"])
 
-    def energy_pair(self, state, ctrl_a, ctrl_b):
-        u = self._potential_stack(state["x"])
-        return ctrl_a["beta"] * u, ctrl_b["beta"] * u
-
-    def cross_energy(self, state, ctrl_grid):
-        u = self._potential_stack(state["x"])
-        return u[:, None] * ctrl_grid["beta"][None, :]
+    def replica_features(self, state):
+        """T-only exchange feature: the bare potential, (R,)."""
+        return {"u": self._potential_stack(state["x"])}
 
     def is_failed(self, state):
         return _any_nonfinite(state)
 
 
-class LJEngine:
+class LJEngine(_TOnlyFeatureAPI):
     """Lennard-Jones fluid; temperature exchange only (the engine-swap
     demonstration).  Forces optionally via the Pallas kernel — with
     ``batched=True`` (default) the kernel runs with a leading REPLICA
@@ -571,14 +603,10 @@ class LJEngine:
     def energy(self, state, ctrl):
         return ctrl["beta"] * self._potential_stack(state["pos"])
 
-    def energy_pair(self, state, ctrl_a, ctrl_b):
-        """Both ctrl assignments from one O(N^2) potential evaluation."""
-        u = self._potential_stack(state["pos"])
-        return ctrl_a["beta"] * u, ctrl_b["beta"] * u
-
-    def cross_energy(self, state, ctrl_grid):
-        u = self._potential_stack(state["pos"])        # (R,)
-        return u[:, None] * ctrl_grid["beta"][None, :]  # (R, C)
+    def replica_features(self, state):
+        """T-only exchange feature: the bare potential, (R,) — one
+        O(N^2) evaluation serves both exchange assignments."""
+        return {"u": self._potential_stack(state["pos"])}
 
     def is_failed(self, state):
         return _any_nonfinite(state)

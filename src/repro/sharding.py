@@ -212,3 +212,30 @@ def tree_shardings(mesh, rules, spec_tree, shape_tree):
 def single_device_mesh() -> Mesh:
     """1-device mesh with the production axis names (for CPU tests)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# --- replica-sharded REMD (REMDDriver.run_sharded) -------------------------
+#
+# The REMD ensemble has exactly two placement classes on a ("replica",)
+# mesh: the engine state stack (heavy, leading axis R — sharded into
+# contiguous replica blocks) and the control plane (assignment, rng,
+# cycle, debt, speed, alive, failures — (R,)-small or scalar, replicated
+# so the exchange/swap decisions can run identically on every shard).
+
+
+def ensemble_specs(ens):
+    """PartitionSpec pytree for an :class:`repro.core.ensemble.Ensemble`
+    on a ``("replica",)`` mesh — usable as shard_map in/out_specs."""
+    return type(ens)(
+        state=jax.tree.map(lambda _: P("replica"), ens.state),
+        assignment=P(), rng=P(), cycle=P(), debt=P(), speed=P(),
+        alive=P(), failures=P())
+
+
+def ensemble_shardings(mesh: Mesh, ens):
+    """NamedSharding pytree matching :func:`ensemble_specs` — pass to
+    ``jax.device_put`` to place an ensemble on the replica mesh (state
+    block-sharded, control plane replicated)."""
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        ensemble_specs(ens),
+                        is_leaf=lambda x: isinstance(x, P))

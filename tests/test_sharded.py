@@ -1,0 +1,242 @@
+"""Replica-sharded execution (``run_sharded``) vs ``run_fused``.
+
+The sharded path must reproduce the single-device fused driver exactly on
+the discrete trajectory — the per-cycle ``assignment`` trace, acceptance
+counters, failure totals, alive masks, neighbor-list health counters —
+across patterns x schemes x force paths, on a 1-shard mesh and on a
+multi-device mesh.  Float state matches to XLA-fusion rounding (the
+shard_map'd scan body compiles with slightly different fusions — the
+same ~1-ulp relationship ``run()`` has to ``run_fused``).
+
+Communication contract: only feature rows and failure/ctrl-index-sized
+tensors may cross devices at exchange time — asserted on the compiled
+HLO via ``launch.hlo_analysis.collective_shapes`` (no all-gather of
+(R, N, 3) positions, ever).
+
+Multi-device cases need forced host devices:
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` exported before
+jax initializes (the dedicated CI job does this); they skip cleanly
+otherwise.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import RepExConfig
+from repro.core import REMDDriver, control_multiset_ok
+from repro.launch.mesh import make_replica_mesh
+from repro.md import HarmonicEngine, MDEngine
+
+N_DEVICES = jax.device_count()
+
+multidevice = pytest.mark.skipif(
+    N_DEVICES < 8,
+    reason="needs 8 devices — export "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8 before "
+           "jax initializes (see docs/SCALING.md)")
+
+
+def _driver(engine=None, pattern="synchronous", scheme="neighbor",
+            failure_rate=0.0, relaunch=True, n_replicas=8, n_cycles=6,
+            md_steps=2, execution_mode="auto", slots=None):
+    cfg = RepExConfig(
+        dimensions=(("temperature", n_replicas),),
+        md_steps_per_cycle=md_steps, n_cycles=n_cycles, pattern=pattern,
+        exchange_scheme=scheme, relaunch_failed=relaunch,
+        execution_mode=execution_mode)
+    return REMDDriver(engine or MDEngine(), cfg, slots=slots,
+                      failure_rate=failure_rate)
+
+
+def _run_pair(n_shards, chunk_cycles=3, engine_factory=MDEngine, **kw):
+    d_fused = _driver(engine=engine_factory(), **kw)
+    d_shard = _driver(engine=engine_factory(), **kw)
+    ens_fused = d_fused.run_fused(d_fused.init(), chunk_cycles=chunk_cycles)
+    ens_shard = d_shard.run_sharded(
+        d_shard.init(), mesh=make_replica_mesh(n_shards),
+        chunk_cycles=chunk_cycles)
+    return d_fused, d_shard, ens_fused, ens_shard
+
+
+def _assert_discrete_identical(d_fused, d_shard, ens_fused, ens_shard):
+    """The bitwise-equivalence contract on everything discrete."""
+    np.testing.assert_array_equal(np.asarray(ens_fused.assignment),
+                                  np.asarray(ens_shard.assignment))
+    np.testing.assert_array_equal(np.asarray(ens_fused.alive),
+                                  np.asarray(ens_shard.alive))
+    assert int(ens_fused.cycle) == int(ens_shard.cycle)
+    assert int(ens_fused.failures) == int(ens_shard.failures)
+    assert d_fused.acceptance == d_shard.acceptance
+    assert len(d_fused.history) == len(d_shard.history)
+    for h_f, h_s in zip(d_fused.history, d_shard.history):
+        for key in ("cycle", "dim", "accept", "attempt", "failed",
+                    "nb_overflow", "nb_rebuilds"):
+            assert h_f[key] == h_s[key], key
+        np.testing.assert_array_equal(h_f["assignment"], h_s["assignment"])
+    assert control_multiset_ok(ens_shard)
+
+
+# -- 1-shard mesh: always runnable, the degenerate-mesh contract ----------
+
+
+@pytest.mark.parametrize("scheme", ["neighbor", "matrix"])
+@pytest.mark.parametrize("pattern", ["synchronous", "asynchronous"])
+def test_sharded_matches_fused_one_shard(pattern, scheme):
+    d_f, d_s, e_f, e_s = _run_pair(1, pattern=pattern, scheme=scheme)
+    _assert_discrete_identical(d_f, d_s, e_f, e_s)
+    np.testing.assert_allclose(np.asarray(e_f.state["pos"]),
+                               np.asarray(e_s.state["pos"]), atol=1e-5)
+
+
+def test_sharded_one_shard_harmonic():
+    d_f, d_s, e_f, e_s = _run_pair(1, engine_factory=HarmonicEngine,
+                                   md_steps=10, n_cycles=8)
+    _assert_discrete_identical(d_f, d_s, e_f, e_s)
+
+
+# -- multi-device mesh: the real thing (8 forced host devices) ------------
+
+
+@multidevice
+@pytest.mark.parametrize("scheme", ["neighbor", "matrix"])
+@pytest.mark.parametrize("pattern", ["synchronous", "asynchronous"])
+def test_sharded_matches_fused_8shards(pattern, scheme):
+    d_f, d_s, e_f, e_s = _run_pair(8, pattern=pattern, scheme=scheme)
+    _assert_discrete_identical(d_f, d_s, e_f, e_s)
+    np.testing.assert_allclose(np.asarray(e_f.state["pos"]),
+                               np.asarray(e_s.state["pos"]), atol=1e-5)
+
+
+@multidevice
+@pytest.mark.parametrize("force_path", ["pallas", "batched", "vmap"])
+def test_sharded_matches_fused_force_paths(force_path):
+    kw = ({"batched": False} if force_path == "vmap"
+          else {"force_path": force_path})
+    d_f, d_s, e_f, e_s = _run_pair(
+        8, engine_factory=lambda: MDEngine(**kw))
+    _assert_discrete_identical(d_f, d_s, e_f, e_s)
+
+
+@multidevice
+def test_sharded_matches_fused_sparse_neighbor_list():
+    """The neighbor list rides the sharded carry: per-shard lists, same
+    rebuild events, same overflow counters as the single-device run."""
+    d_f, d_s, e_f, e_s = _run_pair(
+        8, engine_factory=lambda: MDEngine(nonbonded="sparse"),
+        md_steps=4)
+    _assert_discrete_identical(d_f, d_s, e_f, e_s)
+    assert "nlist" in e_s.state
+
+
+@multidevice
+@pytest.mark.parametrize("relaunch", [True, False],
+                         ids=["relaunch", "continue"])
+def test_sharded_failure_recovery(relaunch):
+    """Injected failures: detection is shard-local, the recovery decision
+    per-ensemble — totals, alive masks and rewinds match the fused path."""
+    d_f, d_s, e_f, e_s = _run_pair(8, failure_rate=0.3, relaunch=relaunch,
+                                   n_cycles=6)
+    _assert_discrete_identical(d_f, d_s, e_f, e_s)
+    assert sum(h["failed"] for h in d_s.history) > 0
+
+
+@multidevice
+def test_sharded_mode2_waves_per_shard():
+    """Mode II time-multiplexes within each shard's block; trajectories
+    still match the single-device mode2 run."""
+    d_f, d_s, e_f, e_s = _run_pair(4, engine_factory=HarmonicEngine,
+                                   execution_mode="mode2", slots=4,
+                                   md_steps=4)
+    assert d_s.execution["mode"] == "mode2"
+    _assert_discrete_identical(d_f, d_s, e_f, e_s)
+
+
+@multidevice
+def test_sharded_invariant_across_mesh_shapes():
+    """1, 2, 4 and 8 shards produce the same discrete trajectory."""
+    traces = []
+    for n_shards in (1, 2, 4, 8):
+        d = _driver()
+        d.run_sharded(d.init(), mesh=make_replica_mesh(n_shards),
+                      chunk_cycles=3)
+        traces.append([h["assignment"].tolist() for h in d.history])
+    assert all(t == traces[0] for t in traces[1:])
+
+
+# -- communication contract (HLO collective census) -----------------------
+
+
+def _compiled_sharded_hlo(n_shards, chunk_cycles=4, engine=None):
+    from repro.sharding import ensemble_shardings
+    d = _driver(engine=engine)
+    mesh = make_replica_mesh(n_shards)
+    ens = jax.device_put(d.init(), ensemble_shardings(mesh, d.init()))
+    fail_key = jax.device_put(
+        jax.random.key(0),
+        jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()))
+    step = d._sharded_chunk_fn(chunk_cycles, mesh, ens)
+    return step.lower(ens, ens.state, fail_key).compile().as_text(), d
+
+
+@multidevice
+def test_sharded_gathers_only_feature_rows():
+    """The acceptance-criterion probe: every collective in the compiled
+    sharded cycle moves at most an (R,)-per-field feature row / ctrl-index
+    /failure-flag tensor; the (R, N, 3) positions NEVER cross devices."""
+    from repro.launch.hlo_analysis import collective_shapes
+    text, d = _compiled_sharded_hlo(8)
+    colls = collective_shapes(text)
+    assert colls, "sharded chunk compiled without any collectives?"
+    R = d.grid.n_ctrl
+    n_atoms = d.engine.system.n_atoms
+    pos_elems = R * n_atoms * 3
+    for c in colls:
+        elems = int(np.prod(c["dims"])) if c["dims"] else 1
+        # rank <= 1 (feature rows / flags / scalars), nowhere near
+        # position-sized
+        assert len(c["dims"]) <= 1, c
+        assert elems <= R, c
+        assert elems < pos_elems, c
+    # and the wire total per compiled chunk is tiny: O(R) numbers
+    total = sum(c["bytes"] for c in colls)
+    assert total <= R * 8 * 8, total
+
+
+@multidevice
+def test_sharded_sparse_gathers_no_neighbor_lists():
+    """The (R, N, K_max) neighbor list is engine state: it must stay
+    shard-local exactly like positions."""
+    from repro.launch.hlo_analysis import collective_shapes
+    text, d = _compiled_sharded_hlo(8, engine=MDEngine(nonbonded="sparse"))
+    for c in collective_shapes(text):
+        assert len(c["dims"]) <= 1, c
+
+
+# -- validation -----------------------------------------------------------
+
+
+def test_sharded_rejects_indivisible_mesh():
+    d = _driver(n_replicas=6)
+    if N_DEVICES >= 4:
+        with pytest.raises(ValueError, match="not divisible"):
+            d.run_sharded(d.init(), mesh=make_replica_mesh(4))
+    with pytest.raises(ValueError, match="replica"):
+        from repro.launch.mesh import make_test_mesh
+        d.run_sharded(d.init(), mesh=make_test_mesh())
+
+
+def test_sharded_requires_feature_api():
+    class MinimalEngine(HarmonicEngine):
+        """An engine without the split feature reductions."""
+        energy_pair_from_features = None
+
+    d = _driver(engine=MinimalEngine())
+    with pytest.raises(TypeError, match="energy_pair_from_features"):
+        d.run_sharded(d.init())
+
+
+def test_make_replica_mesh_validation():
+    with pytest.raises(ValueError, match="devices"):
+        make_replica_mesh(N_DEVICES + 1)
+    mesh = make_replica_mesh(1)
+    assert mesh.shape == {"replica": 1}
