@@ -577,8 +577,132 @@ def sharded(rows: List[str]):
         json.dump(payload, f, indent=2)
 
 
+def exchange_scaling(rows: List[str]):
+    """Ladder-size scaling of the sharded EXCHANGE phase: halo wire
+    (``exchange_comm="halo"``, ppermute ring + shard-local reductions)
+    vs the legacy PR-5 gather wire (``"gather"``, full-row all_gather +
+    replicated reduction), A/B at fixed mesh while R grows.
+
+    HarmonicEngine with ``md_steps_per_cycle=1`` makes the cycle an
+    exchange-phase probe (T_MD ~ 0); both wires produce bitwise-equal
+    trajectories (tests/test_sharded.py), so the timing difference IS
+    the wire + replicated-recompute cost.  Per (R, scheme, comm) cell
+    the JSON records us/cycle AND the compiled chunk's static collective
+    census (``hlo_analysis.collective_budget``): the structural claim —
+    halo wire O(R / n_shards) permute bytes per shard per cycle where
+    the gather wire moves (and re-reduces) O(R) — is pinned by the
+    census even where container throttling blurs the timing.
+
+    ``EXCHANGE_SCALING_SMOKE=1`` shrinks the sweep for CI.  Emitted to
+    ``BENCH_exchange_scaling.json`` (``--json-out`` overrides).
+    """
+    import json
+    import os
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.hlo_analysis import collective_budget
+    from repro.launch.mesh import make_replica_mesh
+    from repro.md import HarmonicEngine
+    from repro.sharding import ensemble_shardings
+
+    smoke = bool(os.environ.get("EXCHANGE_SCALING_SMOKE"))
+    ladders = (256,) if smoke else (256, 1024, 4096)
+    n_cycles = 16 if smoke else 32
+    chunk = 8
+    reps = 3 if smoke else 5
+    n_shards = max(s for s in (1, 2, 4, 8) if s <= jax.device_count())
+    mesh = make_replica_mesh(n_shards)
+
+    def chunk_budget(d):
+        ens0 = d.init()
+        ens = jax.device_put(ens0, ensemble_shardings(mesh, ens0))
+        fail_key = jax.device_put(jax.random.key(0),
+                                  NamedSharding(mesh, P()))
+        step = d._sharded_chunk_fn(chunk, mesh, ens)
+        text = step.lower(ens, ens.state, fail_key).compile().as_text()
+        return collective_budget(text)
+
+    payload: Dict[str, Dict] = {
+        "engine": "harmonic", "md_steps_per_cycle": 1,
+        "n_cycles": n_cycles, "chunk_cycles": chunk,
+        "n_shards": n_shards,
+        "device_count": jax.device_count(),
+        "platform": jax.devices()[0].platform,
+        "forced_host_devices": "xla_force_host_platform_device_count"
+                               in os.environ.get("XLA_FLAGS", ""),
+        "caveats": [
+            "forced host devices are OS threads sharing the container's "
+            "cores: absolute times include thread scheduling and cgroup "
+            "throttling (multi-second windows), mitigated by interleaved "
+            "A/B min-of-reps — ratios are meaningful, absolutes are not",
+            "the structural claim (halo wire = O(R/n_shards) "
+            "collective-permute bytes per shard per cycle; gather wire = "
+            "O(R) all-gather bytes + replicated O(R) recompute) is pinned "
+            "by the static 'collectives' census per cell, which does not "
+            "depend on throttling",
+            "matrix scheme omitted at R=4096: the gather baseline would "
+            "build a replicated (R, R) f32 matrix per shard (67 MB x "
+            "n_shards on host devices)",
+            "on forced HOST devices the all-gather lowers to one "
+            "memcpy-like shared-memory collective, so the halo ring's "
+            "(n_shards-1) sequential rendezvous cost more than the wire "
+            "it saves: expect halo_vs_gather < 1 at small R, rising "
+            "toward parity as R amortizes the fixed hop latency (the "
+            "committed run: 0.69x -> 0.82x -> 0.95x over R=256..4096). "
+            "the halo win the census pins — no O(R * n_fields) gathered "
+            "buffers, O(R/n_shards)-byte hop payloads, shard-local "
+            "energy/matrix tiles — pays on real multi-host meshes where "
+            "per-device wire and memory, not thread rendezvous, bound "
+            "T_EX",
+        ],
+        "ladders": {}}
+
+    for R in ladders:
+        r_entry: Dict[str, Dict] = {}
+        schemes = ("neighbor",) if R > 1024 else ("neighbor", "matrix")
+        for scheme in schemes:
+            drivers = {}
+            for comm in ("halo", "gather"):
+                cfg = RepExConfig(dimensions=(("temperature", R),),
+                                  md_steps_per_cycle=1, n_cycles=n_cycles,
+                                  exchange_scheme=scheme,
+                                  exchange_comm=comm)
+                drivers[comm] = REMDDriver(HarmonicEngine(), cfg)
+            cell: Dict[str, Dict] = {}
+            budgets = {c: chunk_budget(d) for c, d in drivers.items()}
+            for d in drivers.values():                   # compile + warm
+                d.run_sharded(d.init(), mesh=mesh, n_cycles=chunk,
+                              chunk_cycles=chunk)
+            best = {"halo": float("inf"), "gather": float("inf")}
+            for _ in range(reps):                        # interleaved A/B
+                for comm, d in drivers.items():
+                    e = d.init()
+                    t0 = time.perf_counter()
+                    d.run_sharded(e, mesh=mesh, n_cycles=n_cycles,
+                                  chunk_cycles=chunk)
+                    best[comm] = min(best[comm],
+                                     (time.perf_counter() - t0) / n_cycles)
+            for comm in ("halo", "gather"):
+                cell[comm] = {"us_per_cycle": best[comm] * 1e6,
+                              "collectives": budgets[comm]}
+            cell["halo_vs_gather"] = best["gather"] / best["halo"]
+            r_entry[scheme] = cell
+            rows.append(
+                f"exchange_scaling_R{R}_{scheme}_halo,"
+                f"{best['halo']*1e6:.0f},"
+                f"vs_gather={best['gather']/best['halo']:.2f}x;"
+                f"permute_bytes={budgets['halo'].get('collective-permute', {}).get('bytes', 0)};"
+                f"gather_bytes={budgets['gather'].get('all-gather', {}).get('bytes', 0)}")
+            rows.append(f"exchange_scaling_R{R}_{scheme}_gather,"
+                        f"{best['gather']*1e6:.0f},legacy_allgather_wire")
+        payload["ladders"][str(R)] = r_entry
+    with open(JSON_OUT or "BENCH_exchange_scaling.json", "w") as f:
+        json.dump(payload, f, indent=2)
+
+
 ALL = [fig5_overheads, fig6_1d_weak_scaling, fig7_parallel_efficiency,
        fig8_engine_swap, fig9_mremd_weak, fig10_mremd_strong,
        fig12_multicore_replicas, fig13_async_utilization,
        table1_capabilities, xmat_exchange_scaling, cycle_fusion,
-       neighbor_list, sharded]
+       neighbor_list, sharded, exchange_scaling]

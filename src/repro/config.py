@@ -176,6 +176,12 @@ class RepExConfig:
     execution_mode: str = "auto"      # auto | mode1 | mode2
     cores_per_replica: int = 1        # model-axis shard per replica
     exchange_scheme: str = "neighbor" # neighbor (DEO) | matrix (Gibbs)
+    # Sharded-exchange wire protocol (run_sharded only):
+    #   halo   — shard-local reductions + lax.ppermute ladder-ring halos
+    #            (O(R/n_shards) scalars per shard per sweep)
+    #   gather — legacy all_gather of full feature rows (the PR-5 wire;
+    #            kept as the exchange_scaling A/B baseline)
+    exchange_comm: str = "halo"
     async_window: float = 0.5         # fraction of replicas ready per window
     seed: int = 0
     # failure handling

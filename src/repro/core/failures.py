@@ -98,22 +98,31 @@ def detect_recover(engine, ens: Ensemble, policy: str, backup_state: Any
 
 def detect_recover_sharded(engine, ens: Ensemble, policy: str,
                            backup_state: Any, axis_name: str,
-                           n_shards: int) -> Tuple[Ensemble, Any, jax.Array]:
+                           n_shards: int, fail_row: jax.Array = None
+                           ) -> Tuple[Ensemble, Any, jax.Array]:
     """:func:`detect_recover` inside a replica-sharded cycle body.
 
     ``ens.state`` / ``backup_state`` hold only this shard's replica
     block; ``ens.alive`` / ``ens.failures`` are replicated control
-    plane.  Detection is local, then the (R,)-bool failure mask is
-    all-gathered — the only cross-device traffic of the recovery phase
-    — so every shard agrees on ``alive``, the failure counter, and
-    whether the (local) backup freezes this cycle.  Decisions and
-    counters match the unsharded :func:`detect_recover` bitwise; the
-    state mend is a per-replica ``where`` on local rows.
+    plane.  ``fail_row`` is the replicated (R,) raw failure mask the
+    exchange phase already moved across devices this cycle (its halo
+    ring / legacy gather runs on the same post-propagate state, and
+    exchange never mutates state) — when given, recovery adds ZERO
+    cross-device traffic; when ``None`` (standalone use) detection is
+    local and the mask is all-gathered here.  Every shard agrees on
+    ``alive``, the failure counter, and whether the (local) backup
+    freezes this cycle.  Decisions and counters match the unsharded
+    :func:`detect_recover` bitwise; the state mend is a per-replica
+    ``where`` on local rows.
     """
     from repro.core.modes import shard_rows
-    alive_local = shard_rows(ens.alive, axis_name, n_shards)
-    failed_local = engine.is_failed(ens.state) & alive_local
-    failed = jax.lax.all_gather(failed_local, axis_name, tiled=True)
+    if fail_row is not None:
+        failed = fail_row & ens.alive
+        failed_local = shard_rows(failed, axis_name, n_shards)
+    else:
+        alive_local = shard_rows(ens.alive, axis_name, n_shards)
+        failed_local = engine.is_failed(ens.state) & alive_local
+        failed = jax.lax.all_gather(failed_local, axis_name, tiled=True)
     any_failed = jnp.any(failed)
     n_failed = jnp.sum(failed.astype(jnp.int32))
 

@@ -29,15 +29,30 @@ Replica sharding (``fused_cycle(axis_name=...)``, used by
 ``shard_map`` over a ``("replica",)`` mesh axis.  Synchronization
 contract per phase — propagate is PER-REPLICA and fully shard-local
 (positions/velocities/neighbor lists never leave their device); the
-exchange is the only PER-ENSEMBLE phase, and it communicates exactly two
-small tensors per cycle: the all-gathered ctrl-independent feature rows
-(O(R) floats) and the (R,) failure mask.  The swap decision is then
-computed REPLICATED on every shard from identical inputs, which keeps
-the discrete trajectory bitwise-identical to the unsharded ``run_fused``
-(docs/SCALING.md §Bitwise-equivalence contract).  Control-plane vectors
-(``assignment``, ``debt``, ``speed``, ``alive``, per-replica step counts
-and RNG keys) are computed replicated at full (R,) size and sliced to
-the local block via ``modes.shard_rows`` right before propagate.
+exchange is the only PER-ENSEMBLE phase, with two wire protocols
+selected by ``exchange_comm``:
+
+  * ``"halo"`` (default): shard-LOCAL exchange — each shard reduces only
+    its own block's features to the per-replica exchange scalars and
+    those scalars (plus the (B,) failure flags) hop the ladder ring via
+    ``lax.ppermute`` halos (``exchange.neighbor_exchange_sharded`` /
+    ``matrix_exchange_sharded``).  The failure halo is issued BEFORE the
+    expensive energy reduction so XLA overlaps the permute hops with
+    local compute.  Per-shard wire: O(R/n_shards) scalars per sweep —
+    O(1) boundary rows at the paper's R ~ n_devices operating point —
+    and the compiled program contains only collective-permutes.
+  * ``"gather"`` (legacy PR-5 baseline, kept for the
+    ``exchange_scaling`` A/B benchmark): all-gather the (R,)-per-field
+    feature rows + (R,) failure mask and recompute the full reduction
+    replicated on every shard.
+
+Either way the swap decision is evaluated from bitwise-identical
+replicated inputs, which keeps the discrete trajectory bit-equal to the
+unsharded ``run_fused`` (docs/SCALING.md §Bitwise-equivalence contract).
+Control-plane vectors (``assignment``, ``debt``, ``speed``, ``alive``,
+per-replica step counts and RNG keys) are computed replicated at full
+(R,) size and sliced to the local block via ``modes.shard_rows`` right
+before propagate.
 """
 from __future__ import annotations
 
@@ -50,7 +65,9 @@ import jax.numpy as jnp
 from repro.core import modes as M
 from repro.core.controls import ControlGrid, ctrl_for_assignment
 from repro.core.ensemble import Ensemble
-from repro.core.exchange import matrix_exchange, neighbor_exchange
+from repro.core.exchange import (matrix_exchange, matrix_exchange_sharded,
+                                 neighbor_exchange,
+                                 neighbor_exchange_sharded)
 
 
 def _propagate(engine, ens: Ensemble, grid: ControlGrid, n_steps, rng,
@@ -90,7 +107,21 @@ def _propagate_sharded(engine, ens: Ensemble, grid: ControlGrid, n_steps,
 
 
 def _exchange(engine, state, grid, assignment, dim_index: int, parity: int,
-              rng, scheme: str, ready=None, features=None, fail=None):
+              rng, scheme: str, ready=None, features=None, fail=None,
+              halo_axis=None, n_shards: int = 1):
+    """Scheme dispatch.  With ``halo_axis`` set the shard-local halo
+    variants run (they consume the LOCAL ``state`` block directly and
+    return a third element, the replicated fail row); otherwise the
+    legacy entry points run on ``state`` or on pre-gathered
+    ``features``/``fail``."""
+    if halo_axis is not None:
+        if scheme == "matrix":
+            return matrix_exchange_sharded(
+                engine, state, grid, assignment, rng,
+                axis_name=halo_axis, n_shards=n_shards)
+        return neighbor_exchange_sharded(
+            engine, state, grid, assignment, dim_index, parity, rng,
+            axis_name=halo_axis, n_shards=n_shards, ready=ready)
     if scheme == "matrix":
         return matrix_exchange(engine, state, grid, assignment, rng,
                                features=features, fail=fail)
@@ -101,8 +132,9 @@ def _exchange(engine, state, grid, assignment, dim_index: int, parity: int,
 
 def _cycle_core(engine, grid: ControlGrid, ens: Ensemble, *, pattern: str,
                 md_steps: int, window_steps: int, dim_index, parity,
-                scheme: str, execution, mesh, axis_name=None, n_shards=1
-                ) -> Tuple[Ensemble, Dict[str, Any], jax.Array]:
+                scheme: str, execution, mesh, axis_name=None, n_shards=1,
+                exchange_comm: str = "halo"
+                ) -> Tuple[Ensemble, Dict[str, Any], jax.Array, Any]:
     """The ONE cycle body shared by every entry point.
 
     ``dim_index``/``parity`` may be host ints (legacy per-cycle jits) or
@@ -110,9 +142,12 @@ def _cycle_core(engine, grid: ControlGrid, ens: Ensemble, *, pattern: str,
     stacked :class:`PairTable` either way, so legacy and fused execution
     are the same trace by construction, not by manual lockstep.  With
     ``axis_name`` set the body runs per shard (see module docstring):
-    propagate is local, and the exchange consumes all-gathered feature
-    rows + failure flags instead of touching ``state`` directly.
-    Returns (new_ens, exchange_stats, ready_mask).
+    propagate is local, and the exchange communicates via the
+    ``exchange_comm`` wire protocol (halo ppermutes by default, the
+    legacy all-gather when ``"gather"``).  Returns (new_ens,
+    exchange_stats, ready_mask, fail_row) — ``fail_row`` is the
+    replicated (R,) failure mask when sharded (reused by failure
+    recovery so it never re-gathers), else None.
     """
     k_md, k_ex, k_next = jax.random.split(ens.rng, 3)
 
@@ -125,6 +160,7 @@ def _cycle_core(engine, grid: ControlGrid, ens: Ensemble, *, pattern: str,
         max_steps = md_steps
         n_steps = jnp.full(ens.assignment.shape, md_steps, jnp.int32)
 
+    halo_axis = None
     if axis_name is None:
         state = _propagate(engine, ens, grid, n_steps, k_md, execution,
                            max_steps, mesh)
@@ -133,34 +169,45 @@ def _cycle_core(engine, grid: ControlGrid, ens: Ensemble, *, pattern: str,
         state = _propagate_sharded(engine, ens, grid, n_steps, k_md,
                                    execution, max_steps, axis_name,
                                    n_shards)
-        # the ONLY tensors that cross devices at exchange time: the
-        # (R,)-per-field feature rows and the (R,) failure mask —
-        # positions stay shard-local (asserted by the HLO op census in
-        # tests/test_sharded.py)
-        gather = functools.partial(jax.lax.all_gather,
-                                   axis_name=axis_name, tiled=True)
-        features = jax.tree.map(gather, engine.replica_features(state))
-        fail = gather(engine.is_failed(state))
+        if exchange_comm == "gather":
+            # legacy PR-5 wire: all-gather the (R,)-per-field feature
+            # rows and the (R,) failure mask, recompute the reduction
+            # replicated (the exchange_scaling A/B baseline)
+            gather = functools.partial(jax.lax.all_gather,
+                                       axis_name=axis_name, tiled=True)
+            features = jax.tree.map(gather, engine.replica_features(state))
+            fail = gather(engine.is_failed(state))
+        else:
+            # halo wire: the sharded exchange variants reduce the local
+            # block themselves and ring only O(B) exchange scalars +
+            # failure flags per sweep — positions, features and neighbor
+            # lists stay shard-local (HLO census: collective-permutes
+            # only, tests/test_sharded.py)
+            features = fail = None
+            halo_axis = axis_name
+
+    def run_exchange(ready):
+        out = _exchange(engine, state, grid, ens.assignment, dim_index,
+                        parity, k_ex, scheme, ready=ready,
+                        features=features, fail=fail,
+                        halo_axis=halo_axis, n_shards=n_shards)
+        if halo_axis is not None:
+            return out                      # (assignment, stats, fail_row)
+        return out + (fail,)                # gather-mode fail row (or None)
 
     if pattern == "asynchronous":
         debt = ens.debt + n_steps.astype(jnp.float32)
         ready = (debt >= md_steps) & ens.alive
-        assignment, stats = _exchange(engine, state, grid, ens.assignment,
-                                      dim_index, parity, k_ex, scheme,
-                                      ready=ready, features=features,
-                                      fail=fail)
+        assignment, stats, fail_row = run_exchange(ready)
         debt = jnp.where(ready, debt - md_steps, debt)
         new_ens = ens._replace(state=state, assignment=assignment,
                                rng=k_next, cycle=ens.cycle + 1, debt=debt)
     else:
         ready = ens.alive
-        assignment, stats = _exchange(engine, state, grid, ens.assignment,
-                                      dim_index, parity, k_ex, scheme,
-                                      ready=ready, features=features,
-                                      fail=fail)
+        assignment, stats, fail_row = run_exchange(ready)
         new_ens = ens._replace(state=state, assignment=assignment,
                                rng=k_next, cycle=ens.cycle + 1)
-    return new_ens, stats, ready
+    return new_ens, stats, ready, fail_row
 
 
 def sync_cycle(engine, grid: ControlGrid, ens: Ensemble, md_steps: int,
@@ -173,7 +220,7 @@ def sync_cycle(engine, grid: ControlGrid, ens: Ensemble, md_steps: int,
     Synchronization contract: propagate is per-replica; the exchange
     sweep is per-ensemble (it is the barrier)."""
     execution = execution or {"mode": "mode1", "n_waves": 1}
-    new_ens, stats, _ = _cycle_core(
+    new_ens, stats, _, _ = _cycle_core(
         engine, grid, ens, pattern="synchronous", md_steps=md_steps,
         window_steps=0, dim_index=dim_index, parity=parity, scheme=scheme,
         execution=execution, mesh=mesh)
@@ -194,7 +241,7 @@ def async_cycle(engine, grid: ControlGrid, ens: Ensemble, md_steps: int,
     an un-ready member auto-reject, so a straggler delays only its
     ladder neighbours."""
     execution = execution or {"mode": "mode1", "n_waves": 1}
-    new_ens, stats, ready = _cycle_core(
+    new_ens, stats, ready, _ = _cycle_core(
         engine, grid, ens, pattern="asynchronous", md_steps=md_steps,
         window_steps=window_steps, dim_index=dim_index, parity=parity,
         scheme=scheme, execution=execution, mesh=mesh)
@@ -207,7 +254,8 @@ def async_cycle(engine, grid: ControlGrid, ens: Ensemble, md_steps: int,
 def fused_cycle(engine, grid: ControlGrid, ens: Ensemble, *,
                 pattern: str, md_steps: int, window_steps: int,
                 scheme: str = "neighbor", execution=None, mesh=None,
-                axis_name=None, n_shards: int = 1
+                axis_name=None, n_shards: int = 1,
+                exchange_comm: str = "halo"
                 ) -> Tuple[Ensemble, Dict[str, jax.Array]]:
     """One cycle with dim/parity derived ON DEVICE from ``ens.cycle``.
 
@@ -241,11 +289,12 @@ def fused_cycle(engine, grid: ControlGrid, ens: Ensemble, *,
     n_dims = len(grid.dims)
     dim_index = jnp.mod(ens.cycle, n_dims)
     parity = jnp.mod(ens.cycle // n_dims, 2)
-    new_ens, stats, ready = _cycle_core(
+    new_ens, stats, ready, fail_row = _cycle_core(
         engine, grid, ens, pattern=pattern, md_steps=md_steps,
         window_steps=window_steps, dim_index=dim_index, parity=parity,
         scheme=scheme, execution=execution, mesh=mesh,
-        axis_name=axis_name, n_shards=n_shards)
+        axis_name=axis_name, n_shards=n_shards,
+        exchange_comm=exchange_comm)
     flat = {
         "dim": dim_index.astype(jnp.int32),
         "accepted": stats["accepted"],
@@ -253,6 +302,12 @@ def fused_cycle(engine, grid: ControlGrid, ens: Ensemble, *,
         "ready_frac": jnp.mean(ready.astype(jnp.float32)),
         "assignment": new_ens.assignment,
     }
+    if axis_name is not None and fail_row is not None:
+        # the replicated (R,) failure row already rode the exchange halo
+        # this cycle — hand it to the caller (repex._chunk_scan pops it
+        # before the stats enter the scan ys) so failure recovery reuses
+        # it instead of gathering a second time
+        flat["_fail_row"] = fail_row
     nb = nb_health(engine, new_ens.state)
     if axis_name is not None:
         # worst-replica counters over ALL shards (max is exact in f32,

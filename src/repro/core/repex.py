@@ -42,16 +42,19 @@ A third path scales the FUSED chunk across devices:
 ``run_sharded()`` — ``run_fused`` with the replica axis block-sharded
                    over a ``("replica",)`` mesh via ``shard_map`` (the
                    paper's spatial Execution-Mode dimension made a mesh
-                   shape).  Propagate and feature passes are fully
-                   shard-local; the exchange all-gathers only the
-                   (R,)-per-field feature rows and the (R,) failure
-                   mask — positions never cross devices — and computes
-                   the swap decision replicated, so the discrete
-                   trajectory is bitwise-identical to ``run_fused`` on
-                   one device.  T_MD drops by ~1/n_shards while T_EX
-                   gains one tiny collective per cycle (Eq. (1)'s
-                   T_data, between devices instead of host<->device).
-                   See docs/SCALING.md.
+                   shape).  Propagate, feature AND exchange reductions
+                   are shard-local; per sweep only O(R / n_shards)
+                   exchange scalars and failure flags hop the ladder
+                   ring via ``lax.ppermute`` halos (positions never
+                   cross devices; ``cfg.exchange_comm = "gather"``
+                   selects the legacy all-gather wire).  The swap
+                   decision is computed replicated from the
+                   reassembled rows, so the discrete trajectory is
+                   bitwise-identical to ``run_fused`` on one device.
+                   T_MD and the exchange reduction drop by ~1/n_shards
+                   while T_EX gains a ring of tiny permutes per cycle
+                   (Eq. (1)'s T_data, between devices instead of
+                   host<->device).  See docs/SCALING.md.
 
 The driver supports both patterns, both execution modes, failure
 injection/recovery, and periodic ensemble checkpointing (restart-able,
@@ -258,7 +261,11 @@ class REMDDriver:
         dict consumed by ``_chunk_loop`` are defined here exactly once.
         ``axis_name=None`` is the single-mesh fused path;
         ``axis_name="replica"`` runs the same body per shard (local
-        propagate, gathered exchange, sharded recovery).
+        propagate, halo exchange, sharded recovery).  The replicated
+        failure row produced by the sharded exchange rides the stats
+        dict as ``"_fail_row"`` — popped HERE, before the ys enter the
+        scan, and handed to recovery so the failure mask crosses
+        devices exactly once per cycle.
         """
         cfg = self.cfg
         policy = "relaunch" if cfg.relaunch_failed else "continue"
@@ -280,11 +287,13 @@ class REMDDriver:
                 window_steps=window_steps, scheme=cfg.exchange_scheme,
                 execution=self.execution,
                 mesh=None if sharded else self.mesh,
-                axis_name=axis_name, n_shards=n_shards)
+                axis_name=axis_name, n_shards=n_shards,
+                exchange_comm=cfg.exchange_comm)
+            fail_row = stats.pop("_fail_row", None)
             if sharded:
                 new_ens, backup, n_failed = F.detect_recover_sharded(
                     self.engine, new_ens, policy, backup, axis_name,
-                    n_shards)
+                    n_shards, fail_row=fail_row)
             else:
                 new_ens, backup, n_failed = F.detect_recover(
                     self.engine, new_ens, policy, backup)
@@ -387,9 +396,14 @@ class REMDDriver:
 
         Synchronization contract: propagate and feature passes are
         per-replica and fully shard-local; the exchange is the one
-        per-ensemble phase and communicates exactly the all-gathered
-        feature rows + failure masks (positions never cross devices);
-        the host synchronizes once per chunk, as in ``run_fused``.
+        per-ensemble phase and (with the default
+        ``cfg.exchange_comm="halo"``) communicates exactly the
+        shard-local energy rows + failure flags over a static
+        collective-permute ring — O(R / n_shards) scalars per shard per
+        hop, no all_gather of per-replica feature rows; ``"gather"``
+        keeps the legacy replicated wire.  Positions never cross
+        devices either way; the host synchronizes once per chunk, as in
+        ``run_fused``.
         Discrete trajectories (assignments, acceptance, failures,
         nb-counters) are bitwise-identical to ``run_fused`` on ANY mesh
         shape, including the 1-shard mesh (tests/test_sharded.py pins

@@ -3,6 +3,15 @@
 ``exchange_matrix(features, ctrl, use_kernel=...)`` defaults to the Pallas
 kernel in interpret mode off-TPU only when asked; the jnp oracle is the
 default on CPU (interpret mode is a correctness harness, not a fast path).
+
+Row-blocked by construction: every row of the output depends only on
+that row's feature values (``ref.exchange_matrix`` and the kernel tile
+identically over rows), so a caller holding a BLOCK of replicas gets its
+exact (B, C) tile of the full (R, C) matrix by passing just its B
+feature rows.  The halo-sharded Gibbs exchange
+(``core.exchange.matrix_exchange_sharded``) leans on exactly this: each
+shard builds its own tile — O(R·C / n_shards) compute and memory — and
+the replicated (R, C) build disappears from the sharded program.
 """
 from __future__ import annotations
 

@@ -66,6 +66,23 @@ COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
 
+def canonical_collective(op: str):
+    """Map an HLO op name to its canonical collective, or None.
+
+    Backends may split a collective into async ``<op>-start`` /
+    ``<op>-done`` pairs (GPU always, TPU with async collectives; the CPU
+    backend emits the plain sync op).  We count the ``-done`` (whose
+    output is the received tensor) and SKIP the ``-start`` (its output
+    tuple aliases the same buffers — counting both would double every
+    byte), so the census is backend-invariant.
+    """
+    if op.endswith("-start"):
+        return None
+    if op.endswith("-done"):
+        op = op[: -len("-done")]
+    return op if op in COLLECTIVES else None
+
+
 def _shape_bytes(dtype: str, dims: List[int]) -> int:
     n = 1
     for d in dims:
@@ -158,9 +175,10 @@ class HloCostModel:
                         for dd in dims:
                             out_elems *= dd
                     flops += 2.0 * out_elems * csize
-                if op in COLLECTIVES:
-                    coll[op] += out_bytes
-                    coll_n[op] += 1
+                cop = canonical_collective(op)
+                if cop is not None:
+                    coll[cop] += out_bytes
+                    coll_n[cop] += 1
                     # CPU-backend artifact: bf16 dots are computed in f32
                     # and reduced BEFORE the convert-back; on TPU the
                     # reduce itself is bf16.  If this f32 collective's
@@ -170,7 +188,7 @@ class HloCostModel:
                         pat = re.compile(re.escape(name) + r"[,)]")
                         for other in lines:
                             if "= bf16[" in other and pat.search(other):
-                                coll_narrow[op] = coll_narrow.get(op, 0) \
+                                coll_narrow[cop] = coll_narrow.get(cop, 0) \
                                     + out_bytes // 2
                                 break
                 # call edges (fusions, while bodies/conditions)
@@ -310,9 +328,27 @@ def collective_shapes(hlo_text: str) -> List[Dict[str, Any]]:
     out: List[Dict[str, Any]] = []
     for lines in model.computations.values():
         for _name, shape_text, op, _rem in _instructions(lines):
-            if op not in COLLECTIVES:
+            cop = canonical_collective(op)
+            if cop is None:
                 continue
             for dtype, dims in _parse_shapes(shape_text):
-                out.append({"op": op, "dtype": dtype, "dims": dims,
+                out.append({"op": cop, "dtype": dtype, "dims": dims,
                             "bytes": _shape_bytes(dtype, dims)})
     return out
+
+
+def collective_budget(hlo_text: str) -> Dict[str, Dict[str, int]]:
+    """Aggregate :func:`collective_shapes` into a per-collective budget:
+    ``{op: {"count": n_instructions, "bytes": total_output_bytes}}``.
+
+    This is the quantitative half of the communication contract: the
+    halo-exchange census (tests/test_sharded.py) asserts not just WHICH
+    ops appear (collective-permutes, no feature-row all-gathers) but how
+    many bytes each class moves per compiled chunk, so a regression that
+    quietly widens the halo payload fails loudly."""
+    budget: Dict[str, Dict[str, int]] = {}
+    for c in collective_shapes(hlo_text):
+        b = budget.setdefault(c["op"], {"count": 0, "bytes": 0})
+        b["count"] += 1
+        b["bytes"] += c["bytes"]
+    return budget

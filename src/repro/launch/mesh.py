@@ -44,3 +44,42 @@ def make_replica_mesh(n_shards: int = 0):
             f"XLA_FLAGS=--xla_force_host_platform_device_count=N before "
             f"jax initializes)")
     return jax.make_mesh((n_shards,), ("replica",))
+
+
+# --- ladder-neighbor permutation tables (halo exchange) --------------------
+#
+# The replica mesh is a RING in ladder order: shard s holds the contiguous
+# replica block [s*B, (s+1)*B) with B = R / n_shards, and — because the
+# control grid flattens ROW-MAJOR (dim-major: the last exchange dimension
+# is contiguous, earlier dimensions are strided; see
+# ``ControlGrid.neighbor_pairs``) — those blocks are also contiguous runs
+# of flat ctrl indices at t = 0 and stay the unit of halo locality for
+# every dimension's DEO sweep thereafter.  The permutation tables below
+# are the static ``lax.ppermute`` edge lists of that ring; the halo
+# exchange (``repro.sharding.ring_all_gather``) hops blocks along them.
+
+
+def ladder_neighbor_perms(n_shards: int, reverse: bool = False):
+    """Static ``lax.ppermute`` edge list for the replica-ladder ring.
+
+    ``[(s, s+1 mod S), ...]`` — each shard sends to its upper ladder
+    neighbor (``reverse=True``: lower neighbor).  One table per mesh
+    shape; both directions together are the full halo stencil of a
+    1-D ladder decomposition.
+    """
+    if n_shards < 2:
+        return []
+    if reverse:
+        return [(s, (s - 1) % n_shards) for s in range(n_shards)]
+    return [(s, (s + 1) % n_shards) for s in range(n_shards)]
+
+
+def ladder_shard_blocks(n_ctrl: int, n_shards: int):
+    """The contiguous ``[lo, hi)`` replica block each shard owns, in
+    dim-major (row-major flat ctrl) order — the layout contract shared
+    by ``ensemble_specs``, ``modes.shard_rows`` and the halo exchange."""
+    if n_ctrl % n_shards:
+        raise ValueError(f"replica count {n_ctrl} is not divisible by "
+                         f"{n_shards} shards")
+    b = n_ctrl // n_shards
+    return [(s * b, (s + 1) * b) for s in range(n_shards)]

@@ -149,20 +149,23 @@ class MDEngine:
             self.k_max = (NB.suggest_k_max(self.system.n_atoms, base, mask,
                                            self.r_list)
                           if k_max is None else int(k_max))
-            if nlist_build is None:
-                # the dense build is one vectorized (R, N, N) pass —
-                # on CPU it beats the cell machinery (binning, stencil
-                # gathers, dedupe) until N^2 itself is the bottleneck
-                nlist_build = ("cell" if self.system.n_atoms >= 512
-                               else "dense")
-            if nlist_build not in ("dense", "cell"):
-                raise ValueError(f"nlist_build must be 'dense' or 'cell', "
-                                 f"got {nlist_build!r}")
-            self.nlist_build = nlist_build
             extent = base.max(0) - base.min(0) + 2.0 * self.r_list
             self._grid_dims = NB.suggest_grid_dims(extent, self.r_list)
             self._cell_capacity = NB.suggest_cell_capacity(
                 base, self.r_list, self._grid_dims)
+            if nlist_build is None:
+                # occupancy-keyed choice: cells only pay when the
+                # reference geometry spreads atoms thin relative to
+                # r_list (see neighbors.suggest_build_method) — a raw
+                # N-threshold flips compact chains to the strictly
+                # slower cell build
+                nlist_build = NB.suggest_build_method(
+                    self.system.n_atoms, self._grid_dims,
+                    self._cell_capacity)
+            if nlist_build not in ("dense", "cell"):
+                raise ValueError(f"nlist_build must be 'dense' or 'cell', "
+                                 f"got {nlist_build!r}")
+            self.nlist_build = nlist_build
 
     # -- neighbor-list plumbing (nonbonded="sparse") -----------------------
 

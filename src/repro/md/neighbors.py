@@ -340,6 +340,29 @@ def suggest_cell_capacity(positions: np.ndarray, r_list: float,
     return int(np.clip(int(np.ceil(peak * safety)), 8, p.shape[0]))
 
 
+def suggest_build_method(n_atoms: int, grid_dims: Tuple[int, int, int],
+                         cell_capacity: int) -> str:
+    """Choose "cell" vs "dense" from estimated cell OCCUPANCY, not N.
+
+    The cell build only pays when the system is spatially extended
+    relative to ``r_list``: its per-atom candidate set is the 27-cell
+    stencil (fewer along axes with < 3 cells) at ``cell_capacity``
+    atoms per cell, versus the masked-dense build's flat ``n_atoms``
+    candidates.  A raw atom-count threshold gets this exactly wrong for
+    compact or quasi-1-D geometries — the bonded chain's extent is
+    clamped to 16 cells/axis (``suggest_grid_dims``), so its occupancy
+    (and with it the stencil cost) grows linearly with N and dense
+    stays the cheaper build at ANY chain length, while a 3-D-spread
+    system of the same N bins to O(1) occupancy and flips to cells
+    early.  Pick cells only when the estimated stencil candidate count
+    actually undercuts the dense sweep.
+    """
+    stencil_cells = 1
+    for g in grid_dims:
+        stencil_cells *= min(3, int(g))
+    return "cell" if stencil_cells * cell_capacity < n_atoms else "dense"
+
+
 def suggest_k_max(n_atoms: int, positions: np.ndarray, nb_mask: np.ndarray,
                   r_list: float, safety: float = 1.5) -> int:
     """Host-side K_max heuristic: max neighbor count of a reference

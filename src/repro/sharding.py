@@ -239,3 +239,46 @@ def ensemble_shardings(mesh: Mesh, ens):
     return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
                         ensemble_specs(ens),
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# --- halo exchange over the replica-ladder ring ----------------------------
+
+
+def ring_all_gather(x, axis_name: str, n_shards: int, *,
+                    reverse: bool = False):
+    """Share each shard's block with every shard via ladder-neighbor
+    ``lax.ppermute`` hops — NO ``all_gather`` op ever lowers.
+
+    Inside a ``shard_map`` over ``axis_name``, each shard contributes its
+    local ``x`` and receives ``(n_shards,) + x.shape`` — every shard's
+    block stacked in GLOBAL shard order (index 0 = shard 0's block), so
+    ``out.reshape(-1, ...)`` reconstructs the full replica-ordered row
+    bitwise (the blocks are copied, never reduced).  The wire pattern is
+    ``n_shards - 1`` hops along the static ladder ring
+    (``launch.mesh.ladder_neighbor_perms``); each hop carries exactly one
+    shard-block payload — O(block) bytes per shard boundary per hop, the
+    halo budget the HLO census in tests/test_sharded.py pins.
+
+    Compared to ``lax.all_gather`` this trades one fused collective for a
+    pipeline of neighbor permutes: XLA is free to overlap the early hops
+    with independent local compute issued after them (collective–compute
+    overlap), and the compiled program provably contains only
+    ``collective-permute`` ops.
+    """
+    if n_shards == 1:
+        return x[None]
+    perm = _ladder_perms(n_shards, reverse)
+    idx = jax.lax.axis_index(axis_name)
+    out = jnp.zeros((n_shards,) + x.shape, x.dtype).at[idx].set(x)
+    blk = x
+    step = 1 if reverse else -1
+    for t in range(1, n_shards):
+        blk = jax.lax.ppermute(blk, axis_name, perm)
+        # after t forward hops, the block in hand originated t shards back
+        out = out.at[jnp.mod(idx + step * t, n_shards)].set(blk)
+    return out
+
+
+def _ladder_perms(n_shards: int, reverse: bool):
+    from repro.launch.mesh import ladder_neighbor_perms
+    return ladder_neighbor_perms(n_shards, reverse)

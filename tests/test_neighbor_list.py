@@ -320,6 +320,32 @@ def test_sparse_defaults_are_static_and_sane():
                         nlist_build="cell")
     assert all(g >= 1 for g in eng_cell._grid_dims)
     assert 8 <= eng_cell._cell_capacity <= 96
-    # the cell build kicks in automatically only once N^2 dominates
-    assert MDEngine(system=chain_molecule(512),
-                    nonbonded="sparse").nlist_build == "cell"
+
+
+def test_build_method_keys_on_occupancy_not_atom_count():
+    """Regression for the old ``N >= 512 -> cell`` flip: the chain's
+    extent is clamped to 16 cells/axis, so its per-cell occupancy grows
+    with N and the 27-cell stencil NEVER undercuts the masked-dense
+    sweep — dense must stay the default at any chain length."""
+    for n in (512, 1024):
+        eng = MDEngine(system=chain_molecule(n), nonbonded="sparse")
+        assert eng.nlist_build == "dense", n
+        stencil = 1
+        for g in eng._grid_dims:
+            stencil *= min(3, g)
+        # the quantity the heuristic keys on, pinned explicitly: the
+        # estimated stencil candidate count exceeds the dense sweep
+        assert stencil * eng._cell_capacity >= n
+
+    # a genuinely 3-D-spread system of the same N bins to O(1)
+    # occupancy: cells win
+    rng = np.random.default_rng(0)
+    spread = rng.uniform(0.0, 200.0, (1024, 3))
+    gd = NB.suggest_grid_dims(spread.max(0) - spread.min(0) + 2 * R_LIST,
+                              R_LIST)
+    cap = NB.suggest_cell_capacity(spread, R_LIST, gd)
+    assert NB.suggest_build_method(1024, gd, cap) == "cell"
+    # and an explicit override still wins over the heuristic
+    eng = MDEngine(system=chain_molecule(512), nonbonded="sparse",
+                   nlist_build="cell")
+    assert eng.nlist_build == "cell"

@@ -38,12 +38,13 @@ multidevice = pytest.mark.skipif(
 
 def _driver(engine=None, pattern="synchronous", scheme="neighbor",
             failure_rate=0.0, relaunch=True, n_replicas=8, n_cycles=6,
-            md_steps=2, execution_mode="auto", slots=None):
+            md_steps=2, execution_mode="auto", slots=None,
+            dimensions=None, exchange_comm="halo"):
     cfg = RepExConfig(
-        dimensions=(("temperature", n_replicas),),
+        dimensions=dimensions or (("temperature", n_replicas),),
         md_steps_per_cycle=md_steps, n_cycles=n_cycles, pattern=pattern,
         exchange_scheme=scheme, relaunch_failed=relaunch,
-        execution_mode=execution_mode)
+        execution_mode=execution_mode, exchange_comm=exchange_comm)
     return REMDDriver(engine or MDEngine(), cfg, slots=slots,
                       failure_rate=failure_rate)
 
@@ -163,12 +164,80 @@ def test_sharded_invariant_across_mesh_shapes():
     assert all(t == traces[0] for t in traces[1:])
 
 
+@multidevice
+@pytest.mark.parametrize("scheme", ["neighbor", "matrix"])
+def test_sharded_gather_mode_matches_fused(scheme):
+    """The legacy all-gather wire (exchange_comm="gather", the PR-5
+    protocol kept as the exchange_scaling A/B baseline) must still hit
+    the same trajectories."""
+    d_f, d_s, e_f, e_s = _run_pair(8, scheme=scheme,
+                                   exchange_comm="gather")
+    _assert_discrete_identical(d_f, d_s, e_f, e_s)
+
+
+# -- large ladders: the acceptance-criterion R sweep ----------------------
+
+
+@multidevice
+@pytest.mark.parametrize("n_replicas", [256, 1024, 4096])
+def test_sharded_matches_fused_large_ladders(n_replicas):
+    """Bitwise trajectories at R in {256, 1024, 4096} — the regime the
+    halo exchange exists for (per-shard blocks of 32..512 replicas)."""
+    d_f, d_s, e_f, e_s = _run_pair(
+        8, engine_factory=HarmonicEngine, n_replicas=n_replicas,
+        n_cycles=4, md_steps=1, chunk_cycles=2)
+    _assert_discrete_identical(d_f, d_s, e_f, e_s)
+
+
+@multidevice
+def test_sharded_matches_fused_matrix_large():
+    """Gibbs scheme at R = 256: each shard builds a (32, 256) tile in
+    place of the replicated (256, 256) matrix; decisions stay bitwise."""
+    d_f, d_s, e_f, e_s = _run_pair(
+        8, engine_factory=HarmonicEngine, scheme="matrix",
+        n_replicas=256, n_cycles=3, md_steps=1, chunk_cycles=3)
+    _assert_discrete_identical(d_f, d_s, e_f, e_s)
+
+
+@multidevice
+def test_sharded_invariant_across_mesh_shapes_large():
+    """R = 256 across 1/2/4/8 shards: block size changes, the halo ring
+    length changes, the trajectory must not."""
+    traces = []
+    for n_shards in (1, 2, 4, 8):
+        d = _driver(engine=HarmonicEngine(), n_replicas=256, n_cycles=3,
+                    md_steps=1)
+        d.run_sharded(d.init(), mesh=make_replica_mesh(n_shards),
+                      chunk_cycles=3)
+        traces.append([h["assignment"].tolist() for h in d.history])
+    assert all(t == traces[0] for t in traces[1:])
+
+
+# -- multi-dimensional ladders under sharding (2-D T x umbrella) ----------
+
+
+_DIMS_2D = (("temperature", 4), ("umbrella", 4))
+
+
+@multidevice
+@pytest.mark.parametrize("scheme", ["neighbor", "matrix"])
+def test_sharded_2d_ladder_bitwise(scheme):
+    """2-D (T x umbrella) grid over 8 shards: the dim-major flat layout
+    (launch.mesh.ladder_shard_blocks) keeps BOTH dimensions' DEO sweeps
+    on the same halo ring — 8 cycles cover every (dim, parity) sweep
+    twice, bitwise vs run_fused."""
+    d_f, d_s, e_f, e_s = _run_pair(8, dimensions=_DIMS_2D, n_cycles=8,
+                                   scheme=scheme, chunk_cycles=4)
+    _assert_discrete_identical(d_f, d_s, e_f, e_s)
+    assert sorted(set(h["dim"] for h in d_s.history)) == [0, 1]
+
+
 # -- communication contract (HLO collective census) -----------------------
 
 
-def _compiled_sharded_hlo(n_shards, chunk_cycles=4, engine=None):
+def _compiled_sharded_hlo(n_shards, chunk_cycles=4, engine=None, **kw):
     from repro.sharding import ensemble_shardings
-    d = _driver(engine=engine)
+    d = _driver(engine=engine, **kw)
     mesh = make_replica_mesh(n_shards)
     ens = jax.device_put(d.init(), ensemble_shardings(mesh, d.init()))
     fail_key = jax.device_put(
@@ -210,6 +279,53 @@ def test_sharded_sparse_gathers_no_neighbor_lists():
     text, d = _compiled_sharded_hlo(8, engine=MDEngine(nonbonded="sparse"))
     for c in collective_shapes(text):
         assert len(c["dims"]) <= 1, c
+
+
+def _assert_halo_budget(text, d, n_shards):
+    """The tentpole census: NO all-gather anywhere in the compiled halo
+    chunk — the only per-replica data on the wire are collective-permute
+    hops carrying O(B) exchange scalars / failure flags (B = R /
+    n_shards; ONE boundary row when B = 1), plus the scalar pmax
+    all-reduces of the neighbor-list health counters."""
+    from repro.launch.hlo_analysis import collective_budget, \
+        collective_shapes
+    budget = collective_budget(text)
+    assert "all-gather" not in budget, budget
+    assert "reduce-scatter" not in budget and "all-to-all" not in budget
+    assert budget.get("collective-permute", {}).get("count", 0) > 0, budget
+    b = d.grid.n_ctrl // n_shards
+    for c in collective_shapes(text):
+        if c["op"] == "collective-permute":
+            # u-row pack: (2B,) f32 = 8B bytes; failure flags: (B,) pred
+            assert c["bytes"] <= 8 * b, c
+        else:
+            assert c["op"] == "all-reduce" and c["bytes"] <= 8, c
+
+
+@multidevice
+def test_sharded_halo_census_no_all_gather():
+    text, d = _compiled_sharded_hlo(8)
+    _assert_halo_budget(text, d, 8)
+
+
+@multidevice
+def test_sharded_halo_census_2d_both_dims():
+    """Both dimensions of a 2-D grid sweep over the SAME static ladder
+    ring: one compiled chunk covering T and umbrella sweeps stays
+    all-gather-free with the same per-hop byte budget."""
+    text, d = _compiled_sharded_hlo(8, dimensions=_DIMS_2D,
+                                    chunk_cycles=4)
+    _assert_halo_budget(text, d, 8)
+
+
+@multidevice
+def test_sharded_gather_mode_census_still_gathers():
+    """Sanity check on the A/B baseline: the legacy wire really does
+    all-gather the feature rows — the halo win the benchmark measures
+    is a difference the census can see."""
+    from repro.launch.hlo_analysis import collective_budget
+    text, _ = _compiled_sharded_hlo(8, exchange_comm="gather")
+    assert collective_budget(text).get("all-gather", {}).get("count", 0) > 0
 
 
 # -- validation -----------------------------------------------------------
