@@ -133,6 +133,14 @@ def _decide_sweep(assignment, u_self, u_swap, left, right, valid, ri, rj,
         "accepted": jnp.sum(accept.astype(jnp.float32)),
         "mean_delta": (jnp.sum(jnp.where(valid, delta, 0.0))
                        / jnp.maximum(n_valid, 1.0)),
+        # per-pair-slot telemetry rows (W,): slot w of the stacked
+        # PairTable sweep.  ``valid`` and ``accept`` already exist, so
+        # carrying them costs nothing here — callers that do not want
+        # them pop the keys BEFORE the jit boundary and XLA dead-code
+        # eliminates the casts (the telemetry-off HLO-identity contract,
+        # tests/test_telemetry.py).
+        "_pair_attempt": valid.astype(jnp.float32),
+        "_pair_accept": accept.astype(jnp.float32),
     }
     return new_assignment, stats
 

@@ -210,26 +210,48 @@ def _cycle_core(engine, grid: ControlGrid, ens: Ensemble, *, pattern: str,
     return new_ens, stats, ready, fail_row
 
 
+def _pop_pair_rows(stats: Dict[str, Any], keep: bool):
+    """Remove the private per-pair telemetry rows from an exchange stats
+    dict, returning them when ``keep``.  Popping happens INSIDE the trace
+    but the rows only become jit outputs when kept — with ``keep=False``
+    XLA dead-code-eliminates them and the compiled program is identical
+    to one that never carried them (the telemetry-off HLO-identity
+    contract).  The matrix (Gibbs) scheme re-draws its pairings every
+    sweep, so it has no static pair-slot axis and emits no rows."""
+    pa = stats.pop("_pair_attempt", None)
+    pc = stats.pop("_pair_accept", None)
+    if keep and pa is not None:
+        return pa, pc
+    return None, None
+
+
 def sync_cycle(engine, grid: ControlGrid, ens: Ensemble, md_steps: int,
                dim_index: int, parity: int, scheme: str = "neighbor",
-               execution=None, mesh=None
+               execution=None, mesh=None, telemetry_rows: bool = False
                ) -> Tuple[Ensemble, Dict[str, Any]]:
     """One synchronous cycle: propagate-all barrier, then one exchange sweep
     along the scheduled dimension (DEO parity).  Paper Fig 1a.
 
     Synchronization contract: propagate is per-replica; the exchange
-    sweep is per-ensemble (it is the barrier)."""
+    sweep is per-ensemble (it is the barrier).  ``telemetry_rows``
+    surfaces the per-pair attempt/accept rows as ``pair_attempt`` /
+    ``pair_accept`` stats (neighbor scheme only)."""
     execution = execution or {"mode": "mode1", "n_waves": 1}
     new_ens, stats, _, _ = _cycle_core(
         engine, grid, ens, pattern="synchronous", md_steps=md_steps,
         window_steps=0, dim_index=dim_index, parity=parity, scheme=scheme,
         execution=execution, mesh=mesh)
-    return new_ens, {f"dim{dim_index}": stats}
+    pa, pc = _pop_pair_rows(stats, telemetry_rows)
+    out_stats: Dict[str, Any] = {f"dim{dim_index}": stats}
+    if pa is not None:
+        out_stats["pair_attempt"], out_stats["pair_accept"] = pa, pc
+    return new_ens, out_stats
 
 
 def async_cycle(engine, grid: ControlGrid, ens: Ensemble, md_steps: int,
                 window_steps: int, dim_index: int, parity: int,
-                scheme: str = "neighbor", execution=None, mesh=None
+                scheme: str = "neighbor", execution=None, mesh=None,
+                telemetry_rows: bool = False
                 ) -> Tuple[Ensemble, Dict[str, Any]]:
     """One asynchronous real-time window.  Paper Fig 1b.
 
@@ -245,9 +267,12 @@ def async_cycle(engine, grid: ControlGrid, ens: Ensemble, md_steps: int,
         engine, grid, ens, pattern="asynchronous", md_steps=md_steps,
         window_steps=window_steps, dim_index=dim_index, parity=parity,
         scheme=scheme, execution=execution, mesh=mesh)
+    pa, pc = _pop_pair_rows(stats, telemetry_rows)
     out_stats: Dict[str, Any] = {f"dim{dim_index}": stats,
                                  "ready_frac": jnp.mean(
                                      ready.astype(jnp.float32))}
+    if pa is not None:
+        out_stats["pair_attempt"], out_stats["pair_accept"] = pa, pc
     return new_ens, out_stats
 
 
@@ -255,7 +280,7 @@ def fused_cycle(engine, grid: ControlGrid, ens: Ensemble, *,
                 pattern: str, md_steps: int, window_steps: int,
                 scheme: str = "neighbor", execution=None, mesh=None,
                 axis_name=None, n_shards: int = 1,
-                exchange_comm: str = "halo"
+                exchange_comm: str = "halo", telemetry_rows: bool = False
                 ) -> Tuple[Ensemble, Dict[str, jax.Array]]:
     """One cycle with dim/parity derived ON DEVICE from ``ens.cycle``.
 
@@ -284,6 +309,15 @@ def fused_cycle(engine, grid: ControlGrid, ens: Ensemble, *,
     per-cycle assignment trace is what the statistical-correctness
     suite consumes (rung occupancy, per-pair acceptance) — K cycles of
     discrete trajectory for one host fetch.
+
+    ``telemetry_rows=True`` additionally carries the exchange's per-pair
+    attempt/accept rows (``pair_attempt`` / ``pair_accept``, fixed width
+    W — the stacked PairTable's slot axis) in the ys: per-pair counters
+    for K cycles at the same one-fetch-per-chunk cost (zero host
+    round-trips inside the chunk).  Off (the default), the rows are
+    popped before they can become scan outputs, so the compiled program
+    is IDENTICAL to one without telemetry (op-budget-pinned).  The
+    matrix scheme emits no rows (its pairings are re-drawn per sweep).
     """
     execution = execution or {"mode": "mode1", "n_waves": 1}
     n_dims = len(grid.dims)
@@ -295,6 +329,7 @@ def fused_cycle(engine, grid: ControlGrid, ens: Ensemble, *,
         scheme=scheme, execution=execution, mesh=mesh,
         axis_name=axis_name, n_shards=n_shards,
         exchange_comm=exchange_comm)
+    pa, pc = _pop_pair_rows(stats, telemetry_rows)
     flat = {
         "dim": dim_index.astype(jnp.int32),
         "accepted": stats["accepted"],
@@ -302,6 +337,8 @@ def fused_cycle(engine, grid: ControlGrid, ens: Ensemble, *,
         "ready_frac": jnp.mean(ready.astype(jnp.float32)),
         "assignment": new_ens.assignment,
     }
+    if pa is not None:
+        flat["pair_attempt"], flat["pair_accept"] = pa, pc
     if axis_name is not None and fail_row is not None:
         # the replicated (R,) failure row already rode the exchange halo
         # this cycle — hand it to the caller (repex._chunk_scan pops it

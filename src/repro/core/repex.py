@@ -85,12 +85,14 @@ from repro.core.engine import NB_STAT_KEYS, engine_capabilities
 from repro.core.ensemble import Ensemble, make_ensemble
 from repro.core.modes import auto_mode
 from repro.ckpt import CheckpointManager
+from repro.obs import build_report
 
 
 class REMDDriver:
     def __init__(self, engine, cfg: RepExConfig, mesh=None,
                  slots: Optional[int] = None, ckpt_dir: Optional[str] = None,
-                 ckpt_every: int = 0, failure_rate: float = 0.0):
+                 ckpt_every: int = 0, failure_rate: float = 0.0,
+                 telemetry=None):
         self.engine = engine
         self.capabilities = engine_capabilities(engine)
         # can nb_stats ever be nonzero?  (an engine reporting a dense
@@ -120,11 +122,49 @@ class REMDDriver:
         self.history: List[Dict[str, float]] = []
         self.acceptance = {f"dim{d.index}": [0.0, 0.0]
                            for d in self.grid.dims}
+        # observability (repro.obs): optional Telemetry accumulator.
+        # ``telemetry=None`` is a TRUE no-op — not one compiled op
+        # differs from an un-instrumented driver (tests/test_telemetry).
+        self.telemetry = telemetry
+        self.last_report = None
+        self._phase_probes = None
+        self._probe_warmed: set = set()
+        self._wire_budgets: Dict[int, Any] = {}
+
+    # -- telemetry plumbing ------------------------------------------------
+
+    @property
+    def _tel(self):
+        """The live telemetry accumulator, or None when observability is
+        off (absent or disabled — both compile the identical program)."""
+        t = self.telemetry
+        return t if (t is not None and t.enabled) else None
+
+    @property
+    def _obs_rows(self) -> bool:
+        """Carry the per-pair attempt/accept rows in cycle stats?  Part
+        of every compiled-fn cache key that consumes it."""
+        t = self._tel
+        return bool(t is not None and t.exchange_counters)
+
+    def _maybe_phase_sample(self, ens, cyc: int) -> None:
+        """Chunk-boundary phase probe: time each cycle phase standalone
+        on the CURRENT ensemble (JAX arrays are immutable — probes read,
+        never advance, so the trajectory is bitwise unchanged)."""
+        tel = self._tel
+        if tel is None or not tel.want_phase_sample():
+            return
+        from repro.obs import make_phase_probes, sample_phases
+        if self._phase_probes is None:
+            self._phase_probes = make_phase_probes(self)
+        times = sample_phases(self._phase_probes, ens, self._probe_warmed)
+        tel.note_phase_sample(cyc, times)
 
     # -- compiled cycle factory (one per dim x parity x pattern) ----------
 
     def _cycle_fn(self, dim_index: int, parity: int):
-        key = (dim_index, parity, self.cfg.pattern)
+        rows = self._obs_rows
+        key = (dim_index, parity, self.cfg.pattern, rows)
         if key in self._compiled:
             return self._compiled[key]
         cfg = self.cfg
@@ -136,14 +176,14 @@ class REMDDriver:
                                      * cfg.async_window), 1),
                 dim_index=dim_index, parity=parity,
                 scheme=cfg.exchange_scheme, execution=self.execution,
-                mesh=self.mesh)
+                mesh=self.mesh, telemetry_rows=rows)
         else:
             fn = functools.partial(
                 patterns.sync_cycle, self.engine, self.grid,
                 md_steps=cfg.md_steps_per_cycle,
                 dim_index=dim_index, parity=parity,
                 scheme=cfg.exchange_scheme, execution=self.execution,
-                mesh=self.mesh)
+                mesh=self.mesh, telemetry_rows=rows)
         jitted = jax.jit(lambda ens: fn(ens))
         self._compiled[key] = jitted
         return jitted
@@ -226,6 +266,9 @@ class REMDDriver:
             else:
                 nb = dict.fromkeys(NB_STAT_KEYS, 0.0)
             assignment = jax.device_get(new_ens.assignment)
+            pair_rows = (jax.device_get((stats["pair_attempt"],
+                                         stats["pair_accept"]))
+                         if "pair_attempt" in stats else (None, None))
             t_data = time.perf_counter() - t3
 
             self.history.append({
@@ -241,12 +284,23 @@ class REMDDriver:
             })
             ens = new_ens
 
+            tel = self._tel
+            if tel is not None:
+                self._maybe_phase_sample(ens, cyc)
+                tel.note_cycles(
+                    cycles=[cyc], dims=[dim_index],
+                    assignments=assignment[None],
+                    n_dims=n_dims, n_ctrl=self.grid.n_ctrl,
+                    pair_attempt=pair_rows[0], pair_accept=pair_rows[1],
+                    t_cycle=t_step, t_data=t_data, t_prep=t_prep)
+
             if self.ckpt is not None:
                 self.ckpt.maybe_save(cyc, ens._asdict())
             if verbose:
                 acc = (s["accepted"] / max(s["attempted"], 1)) * 100
                 print(f"cycle {cyc:4d} dim {dim_index} "
                       f"acc {acc:5.1f}%  t {t_step*1e3:7.1f} ms")
+        self.last_report = build_report(self, "run")
         return ens
 
     # -- fused multi-cycle path -------------------------------------------
@@ -272,6 +326,7 @@ class REMDDriver:
         inject = self.failure_rate > 0
         window_steps = max(int(cfg.md_steps_per_cycle * cfg.async_window), 1)
         sharded = axis_name is not None
+        obs_rows = self._obs_rows
 
         def one_cycle(carry, _):
             ens, backup, fail_key = carry
@@ -288,7 +343,8 @@ class REMDDriver:
                 execution=self.execution,
                 mesh=None if sharded else self.mesh,
                 axis_name=axis_name, n_shards=n_shards,
-                exchange_comm=cfg.exchange_comm)
+                exchange_comm=cfg.exchange_comm,
+                telemetry_rows=obs_rows)
             fail_row = stats.pop("_fail_row", None)
             if sharded:
                 new_ens, backup, n_failed = F.detect_recover_sharded(
@@ -310,7 +366,7 @@ class REMDDriver:
 
     def _fused_chunk_fn(self, chunk_cycles: int):
         """Jitted scan over ``chunk_cycles`` complete cycles (cached)."""
-        key = ("fused", chunk_cycles, self.failure_rate)
+        key = ("fused", chunk_cycles, self.failure_rate, self._obs_rows)
         if key in self._compiled:
             return self._compiled[key]
         jitted = jax.jit(self._chunk_scan(chunk_cycles))
@@ -338,9 +394,11 @@ class REMDDriver:
             raise ValueError(f"chunk_cycles must be >= 1, got {chunk_cycles}")
         backup = ens.state
         fail_key = jax.random.key(self.cfg.seed + 999)
-        return self._chunk_loop(ens, backup, fail_key,
-                                n_cycles or self.cfg.n_cycles, chunk_cycles,
-                                verbose, self._fused_chunk_fn)
+        ens = self._chunk_loop(ens, backup, fail_key,
+                               n_cycles or self.cfg.n_cycles, chunk_cycles,
+                               verbose, self._fused_chunk_fn)
+        self.last_report = build_report(self, "fused", chunk_cycles)
+        return ens
 
     # -- replica-sharded multi-device path --------------------------------
 
@@ -364,7 +422,10 @@ class REMDDriver:
         # shard_map closes over the mesh, so two same-shaped meshes on
         # different device sets must not share a cache entry
         devs = tuple(d.id for d in mesh.devices.flat)
-        key = ("sharded", chunk_cycles, self.failure_rate, n_shards, devs)
+        tel = self._tel
+        wire = bool(tel is not None and tel.wire_ledger)
+        key = ("sharded", chunk_cycles, self.failure_rate, n_shards, devs,
+               self._obs_rows, wire)
         if key in self._compiled:
             return self._compiled[key]
         chunk = self._chunk_scan(chunk_cycles, axis_name="replica",
@@ -378,6 +439,21 @@ class REMDDriver:
                          out_specs=(espec, espec.state, P(), P()),
                          check_rep=False)
         jitted = jax.jit(body)
+        if wire:
+            # wire ledger: AOT-compile the chunk (lower -> compile) so
+            # the compiled HLO is in hand for a collective census, and
+            # use THAT executable as the step function — one compile,
+            # not two, and byte-identical code to the jit path (the
+            # ledger is a static census of the program that actually
+            # runs, scaled by invocations in _chunk_loop).
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.launch.hlo_analysis import collective_budget
+            fk = jax.device_put(jax.random.key(0),
+                                NamedSharding(mesh, PartitionSpec()))
+            compiled = jitted.lower(ens, ens.state, fk).compile()
+            self._wire_budgets[chunk_cycles] = collective_budget(
+                compiled.as_text())
+            jitted = compiled
         self._compiled[key] = jitted
         return jitted
 
@@ -448,10 +524,12 @@ class REMDDriver:
         backup = ens.state
         fail_key = jax.device_put(jax.random.key(self.cfg.seed + 999),
                                   NamedSharding(mesh, P()))
-        return self._chunk_loop(
+        ens = self._chunk_loop(
             ens, backup, fail_key, n_cycles or self.cfg.n_cycles,
             chunk_cycles, verbose,
             lambda k: self._sharded_chunk_fn(k, mesh, ens))
+        self.last_report = build_report(self, "sharded", chunk_cycles)
+        return ens
 
     # -- the chunked host loop shared by run_fused / run_sharded ----------
 
@@ -505,6 +583,23 @@ class REMDDriver:
                     "nb_rebuilds": rebuilds[i],
                 })
             done += k
+
+            tel = self._tel
+            if tel is not None:
+                # phase probe first: want_phase_sample keys off the
+                # chunk counter BEFORE note_cycles increments it, so
+                # every Nth chunk boundary (including the first) samples
+                self._maybe_phase_sample(ens, c0 + done - 1)
+                budget = self._wire_budgets.get(k)
+                if budget is not None and tel.wire_ledger:
+                    tel.note_wire_budget(k, budget)
+                    tel.note_wire_invocation(k)
+                tel.note_cycles(
+                    cycles=cycles, dims=dims, assignments=assignment,
+                    n_dims=len(self.grid.dims), n_ctrl=self.grid.n_ctrl,
+                    pair_attempt=ys.get("pair_attempt"),
+                    pair_accept=ys.get("pair_accept"),
+                    t_cycle=t_chunk, t_data=t_data)
 
             if self.ckpt is not None and self.ckpt.every > 0:
                 lo, hi = c0 + done - k, c0 + done - 1

@@ -54,6 +54,13 @@ def main():
     ap.add_argument("--shards", type=int, default=0,
                     help="replica-shard over N devices "
                          "(run_sharded; uses --chunk or 16)")
+    ap.add_argument("--report-out", default=None, metavar="PATH",
+                    help="write the structured RunReport JSON here "
+                         "(enables telemetry: per-pair counters, phase "
+                         "brackets, wire ledger — docs/OBSERVABILITY.md)")
+    ap.add_argument("--phase-probe-every", type=int, default=1,
+                    help="sample phase timings every Nth chunk boundary "
+                         "(0 = off; only with --report-out)")
     args = ap.parse_args()
 
     cfg = RepExConfig(
@@ -75,10 +82,15 @@ def main():
     else:
         engine = MDEngine(system=chain_molecule(args.atoms))
 
+    telemetry = None
+    if args.report_out:
+        from repro.obs import Telemetry
+        telemetry = Telemetry(phase_probe_every=args.phase_probe_every)
     driver = REMDDriver(engine, cfg, slots=args.slots,
                         ckpt_dir=args.ckpt_dir,
                         ckpt_every=1 if args.ckpt_dir else 0,
-                        failure_rate=args.failure_rate)
+                        failure_rate=args.failure_rate,
+                        telemetry=telemetry)
     print(f"replicas={driver.grid.n_ctrl} execution={driver.execution} "
           f"pattern={cfg.pattern} scheme={cfg.exchange_scheme}")
     ens = driver.init()
@@ -95,6 +107,13 @@ def main():
     print("acceptance:", {k: f"{v*100:.1f}%"
                           for k, v in driver.acceptance_ratios().items()})
     print("failures recovered:", sum(h["failed"] for h in driver.history))
+    if args.report_out:
+        driver.last_report.save(args.report_out)
+        eq1 = driver.last_report.phases["eq1"]
+        print(f"report -> {args.report_out}")
+        if eq1:
+            print("Eq.(1) split:",
+                  {k: f"{v*1e3:.3f} ms" for k, v in eq1.items()})
 
 
 if __name__ == "__main__":

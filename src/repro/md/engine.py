@@ -84,7 +84,8 @@ class MDEngine:
                  use_force_kernels: Optional[bool] = None,
                  nonbonded: str = "dense", cutoff: float = 9.0,
                  skin: float = 1.5, k_max: Optional[int] = None,
-                 nlist_build: Optional[str] = None):
+                 nlist_build: Optional[str] = None,
+                 cell_capacity: Optional[int] = None):
         """``force_path``: "pallas" (analytic, default), "batched"
         (autodiff of the replica-major potential) or "vmap" (per-replica
         oracle).  ``batched=False`` implies "vmap" — requesting any
@@ -104,7 +105,13 @@ class MDEngine:
         system's reference geometry (see ``repro.md.neighbors``);
         capacity overflow is recorded in the list and surfaced per
         cycle as the ``nb_overflow`` driver stat, never silently
-        ignored.
+        ignored.  ``cell_capacity`` caps the "cell" build's per-cell
+        slot count explicitly (the candidate buffer is N x 27*capacity,
+        so the default occupancy heuristic can suggest a large buffer
+        for dense geometries); atoms beyond a cell's capacity spill
+        into the same ``nb_overflow`` accounting — an explicit cap
+        bounds memory, and a too-tight one is visible in the driver
+        stats, never silent.
         """
         self.system = system or chain_molecule()
         self.dt = dt
@@ -151,8 +158,13 @@ class MDEngine:
                           if k_max is None else int(k_max))
             extent = base.max(0) - base.min(0) + 2.0 * self.r_list
             self._grid_dims = NB.suggest_grid_dims(extent, self.r_list)
-            self._cell_capacity = NB.suggest_cell_capacity(
-                base, self.r_list, self._grid_dims)
+            self._cell_capacity = (
+                int(cell_capacity) if cell_capacity is not None
+                else NB.suggest_cell_capacity(base, self.r_list,
+                                              self._grid_dims))
+            if self._cell_capacity < 1:
+                raise ValueError(f"cell_capacity must be >= 1, got "
+                                 f"{self._cell_capacity}")
             if nlist_build is None:
                 # occupancy-keyed choice: cells only pay when the
                 # reference geometry spreads atoms thin relative to

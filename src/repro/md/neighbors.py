@@ -36,7 +36,7 @@ per-cycle driver stat (``nb_overflow``).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -325,10 +325,24 @@ def suggest_grid_dims(extent: np.ndarray, r_list: float,
 
 def suggest_cell_capacity(positions: np.ndarray, r_list: float,
                           grid_dims: Tuple[int, int, int],
-                          safety: float = 4.0) -> int:
+                          safety: float = 4.0,
+                          max_capacity: Optional[int] = None) -> int:
     """Host-side per-cell capacity heuristic: peak occupancy of the
     reference configuration binned with the same geometry the device
-    build uses, times a safety factor (clamped to [8, N])."""
+    build uses, times a safety factor (clamped to [8, N]).
+
+    ``max_capacity`` CAPS the suggestion (memory bound: the cell build's
+    candidate buffer is N x 27*capacity).  A cap below the runtime peak
+    occupancy is safe, not wrong — ``_bin_atoms`` drops the overflowing
+    ranks and counts them into the list's ``dropped``/``nb_overflow``
+    accounting, so a too-tight cap is observable in the driver stats
+    (and the RunReport neighbor rollup), never silent.  The cap is
+    deliberately NOT applied by default: ``suggest_build_method`` keys
+    the dense-vs-cell choice off this capacity, and compact geometries
+    (bonded chains, whose occupancy grows ~N) must keep reporting their
+    true occupancy so they stay on the dense build (the N=1024
+    compact-chain pin in tests/test_neighbor_list.py).
+    """
     p = np.asarray(positions, np.float64)
     g = np.asarray(grid_dims, np.float64)
     lo, hi = p.min(0), p.max(0)
@@ -337,7 +351,10 @@ def suggest_cell_capacity(positions: np.ndarray, r_list: float,
                  np.asarray(grid_dims) - 1)
     ids = (cc[:, 0] * grid_dims[1] + cc[:, 1]) * grid_dims[2] + cc[:, 2]
     peak = int(np.bincount(ids).max())
-    return int(np.clip(int(np.ceil(peak * safety)), 8, p.shape[0]))
+    cap = int(np.clip(int(np.ceil(peak * safety)), 8, p.shape[0]))
+    if max_capacity is not None:
+        cap = max(min(cap, int(max_capacity)), 1)
+    return cap
 
 
 def suggest_build_method(n_atoms: int, grid_dims: Tuple[int, int, int],

@@ -1,0 +1,19 @@
+"""repro.obs — on-device observability for REMD runs.
+
+:class:`Telemetry` (config + host accumulator) rides the fused cycle
+scan; :class:`RunReport` is the structured summary every driver path
+emits.  See docs/OBSERVABILITY.md for the Eq. (1) phase mapping and the
+observer-effect contract (telemetry off = identical HLO; telemetry on =
+bitwise-identical trajectory).
+"""
+from repro.obs.report import (REPORT_VERSION, RunReport, build_report,
+                              validate_report)
+from repro.obs.telemetry import (PHASES, Telemetry, accumulate_occupancy,
+                                 make_phase_probes, round_trip_fold,
+                                 sample_phases)
+
+__all__ = [
+    "PHASES", "REPORT_VERSION", "RunReport", "Telemetry",
+    "accumulate_occupancy", "build_report", "make_phase_probes",
+    "round_trip_fold", "sample_phases", "validate_report",
+]

@@ -1,0 +1,351 @@
+"""On-device observability for REMD runs — the Eq. (1) instrumentation.
+
+The paper's performance argument decomposes cycle time as
+
+    T_c = T_MD + T_EX + T_data + T_RepEx_over + T_runtime_over     (Eq. 1)
+
+but a fused K-cycle scan only ever shows the host their SUM.  This module
+splits it back apart without perturbing the run:
+
+  * **Exchange/wire counters** ride the fused cycle scan itself as extra
+    per-cycle ys rows (``pair_attempt`` / ``pair_accept``, one row per
+    DEO sweep, threaded ``exchange._decide_sweep`` ->
+    ``patterns.fused_cycle`` -> ``repex._chunk_loop`` exactly like PR-6's
+    ``_fail_row``): zero host round-trips inside a chunk, one fetch per
+    chunk, and when telemetry is OFF the rows are popped before the jit
+    boundary so the compiled program is IDENTICAL (op-budget-pinned,
+    tests/test_telemetry.py).
+  * **Phase timing brackets** are sampled at chunk boundaries: standalone
+    jitted probes of each phase (propagate / features / exchange /
+    detect-recover) run on the CURRENT ensemble between chunks, fenced by
+    ``block_until_ready``.  Probes are pure functions of immutable arrays
+    — they read the ensemble, never advance it — so the trajectory is
+    bitwise unchanged (the observer-effect contract,
+    docs/OBSERVABILITY.md).
+  * **Rung occupancy / round trips** are folded on the host from the
+    per-cycle ``assignment`` trace the driver already fetches (PR-4) —
+    no extra device work at all.
+  * **Wire ledger** (``run_sharded``): the compiled chunk's HLO is
+    census'd with ``launch.hlo_analysis.collective_budget`` and scaled by
+    the number of chunk invocations — measured bytes-per-collective for
+    the run, attached to the :class:`~repro.obs.report.RunReport`.
+
+A :class:`Telemetry` instance is both the configuration (which probes
+are on) and the host-side accumulator (cleared by :meth:`reset`, e.g.
+after a warm-up period).  ``REMDDriver(..., telemetry=Telemetry())``
+activates it; the default ``telemetry=None`` changes NOTHING — not one
+compiled op (the off switch is a true no-op).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+PHASES = ("propagate", "features", "exchange", "detect_recover")
+
+
+def accumulate_occupancy(trace: np.ndarray, n_ctrl: int,
+                         out: Optional[np.ndarray] = None) -> np.ndarray:
+    """Fold a (C, R) assignment trace into (R, n_ctrl) occupancy counts.
+
+    ``out[r, c]`` = number of cycles replica r held ctrl c.  Rows sum to
+    the number of cycles folded (each replica holds exactly one ctrl per
+    cycle), and the result is invariant under any permutation of the
+    cycle axis — both pinned by tests/test_property.py.  Pass ``out`` to
+    accumulate incrementally (chunk-by-chunk feeding is exactly
+    equivalent to one-shot feeding).
+    """
+    trace = np.asarray(trace)
+    if trace.ndim == 1:
+        trace = trace[None, :]
+    n_rep = trace.shape[1]
+    if out is None:
+        out = np.zeros((n_rep, n_ctrl), np.int64)
+    np.add.at(out, (np.arange(n_rep)[None, :], trace), 1)
+    return out
+
+
+def round_trip_fold(trace: np.ndarray, n_ctrl: int,
+                    phase: Optional[np.ndarray] = None,
+                    counts: Optional[np.ndarray] = None):
+    """Fold a (C, R) assignment trace into per-replica round-trip counts.
+
+    A replica completes one round trip when it returns to the BOTTOM
+    rung (ctrl 0) after having touched the TOP rung (ctrl n_ctrl - 1)
+    since its previous bottom visit — the standard ladder-diffusion
+    diagnostic (round-trip rate is what DEO/exchange-move optimization
+    maximizes, Bittner et al. arXiv:0708.3627).  ``phase`` per replica:
+    0 = never touched bottom, 1 = heading up (bottom touched), 2 = top
+    touched (heading down).  Returns (phase, counts); pass them back to
+    accumulate incrementally — chunked feeding == one-shot feeding
+    (tests/test_property.py).
+    """
+    trace = np.asarray(trace)
+    if trace.ndim == 1:
+        trace = trace[None, :]
+    n_rep = trace.shape[1]
+    if phase is None:
+        phase = np.zeros(n_rep, np.int8)
+    if counts is None:
+        counts = np.zeros(n_rep, np.int64)
+    for row in trace:
+        bottom = row == 0
+        top = row == (n_ctrl - 1)
+        counts = counts + ((phase == 2) & bottom)
+        phase = np.where(bottom, 1, phase)          # 2 -> 1 counted above
+        phase = np.where(top & (phase == 1), 2, phase)
+    return phase, counts
+
+
+@dataclass
+class Telemetry:
+    """Observability configuration + host-side accumulator (one run or
+    several — ``REMDDriver`` accumulates across ``run*`` calls like
+    ``driver.history``; :meth:`reset` clears, e.g. post-warm-up).
+
+    ``enabled=False`` (or passing ``telemetry=None`` to the driver) is a
+    TRUE no-op: the compiled programs are identical to an
+    un-instrumented driver (pinned by tests/test_telemetry.py).
+    """
+    enabled: bool = True
+    # per-pair attempt/accept counter rows riding the cycle scan
+    # (neighbor/DEO scheme only — the Gibbs matrix scheme's pairings are
+    # re-drawn per sweep, so a static pair-slot axis does not exist)
+    exchange_counters: bool = True
+    # sample per-phase timings every Nth chunk boundary (0 = off).
+    # ``run()`` samples every Nth cycle.
+    phase_probe_every: int = 1
+    # census the compiled sharded chunk's collectives (run_sharded only)
+    wire_ledger: bool = True
+
+    # -- accumulators (host state, not config) ----------------------------
+    pair_attempt: Optional[np.ndarray] = field(default=None, repr=False)
+    pair_accept: Optional[np.ndarray] = field(default=None, repr=False)
+    occupancy: Optional[np.ndarray] = field(default=None, repr=False)
+    rt_phase: Optional[np.ndarray] = field(default=None, repr=False)
+    round_trips: Optional[np.ndarray] = field(default=None, repr=False)
+    phase_samples: List[Dict[str, float]] = field(default_factory=list,
+                                                  repr=False)
+    wire: Dict[int, Dict[str, Any]] = field(default_factory=dict,
+                                            repr=False)
+    n_cycles_seen: int = field(default=0, repr=False)
+    t_cycle_total: float = field(default=0.0, repr=False)
+    t_data_total: float = field(default=0.0, repr=False)
+    t_prep_total: float = field(default=0.0, repr=False)
+    _chunks_seen: int = field(default=0, repr=False)
+
+    # -- lifecycle --------------------------------------------------------
+
+    def reset(self) -> None:
+        """Clear every accumulator (config flags are kept).  Call after a
+        warm-up period so report counters cover only production cycles
+        (tests/test_statistics.py does exactly this)."""
+        self.pair_attempt = None
+        self.pair_accept = None
+        self.occupancy = None
+        self.rt_phase = None
+        self.round_trips = None
+        self.phase_samples = []
+        self.wire = {}
+        self.n_cycles_seen = 0
+        self.t_cycle_total = 0.0
+        self.t_data_total = 0.0
+        self.t_prep_total = 0.0
+        self._chunks_seen = 0
+
+    # -- per-chunk / per-cycle feeding ------------------------------------
+
+    def note_cycles(self, *, cycles, dims, assignments, n_dims: int,
+                    n_ctrl: int, pair_attempt=None, pair_accept=None,
+                    t_cycle: float = 0.0, t_data: float = 0.0,
+                    t_prep: float = 0.0) -> None:
+        """Fold one chunk's fetched stats (K cycles) into the counters.
+
+        ``assignments``: (K, R) post-cycle assignment rows.  ``cycles``:
+        (K,) cycle indices (parity derives as (cycle // n_dims) % 2,
+        matching ``patterns.fused_cycle``).  ``pair_attempt`` /
+        ``pair_accept``: (K, W) per-sweep rows, or None when the counter
+        rows are off / the scheme is matrix.  Timing args are TOTALS over
+        the K cycles.
+        """
+        cycles = np.asarray(cycles).reshape(-1)
+        dims = np.asarray(dims).reshape(-1)
+        assignments = np.asarray(assignments)
+        if assignments.ndim == 1:
+            assignments = assignments[None, :]
+        k = assignments.shape[0]
+
+        self.occupancy = accumulate_occupancy(assignments, n_ctrl,
+                                              self.occupancy)
+        self.rt_phase, self.round_trips = round_trip_fold(
+            assignments, n_ctrl, self.rt_phase, self.round_trips)
+
+        if pair_attempt is not None:
+            att = np.asarray(pair_attempt, np.float64)
+            acc = np.asarray(pair_accept, np.float64)
+            if att.ndim == 1:
+                att, acc = att[None, :], acc[None, :]
+            parity = (cycles // n_dims) % 2
+            if self.pair_attempt is None:
+                w = att.shape[-1]
+                self.pair_attempt = np.zeros((n_dims, 2, w), np.float64)
+                self.pair_accept = np.zeros((n_dims, 2, w), np.float64)
+            np.add.at(self.pair_attempt, (dims, parity), att)
+            np.add.at(self.pair_accept, (dims, parity), acc)
+
+        self.n_cycles_seen += k
+        self.t_cycle_total += t_cycle
+        self.t_data_total += t_data
+        self.t_prep_total += t_prep
+        self._chunks_seen += 1
+
+    def want_phase_sample(self) -> bool:
+        e = self.phase_probe_every
+        return bool(e) and (self._chunks_seen % e == 0)
+
+    def note_phase_sample(self, cycle: int, times: Dict[str, float]) -> None:
+        self.phase_samples.append({"cycle": int(cycle), **times})
+
+    def note_wire_budget(self, chunk_cycles: int,
+                         budget: Dict[str, Dict[str, int]]) -> None:
+        """Record the compiled chunk's per-collective budget (one entry
+        per distinct compiled chunk length)."""
+        self.wire.setdefault(int(chunk_cycles),
+                             {"per_chunk": budget, "invocations": 0})
+
+    def note_wire_invocation(self, chunk_cycles: int) -> None:
+        entry = self.wire.get(int(chunk_cycles))
+        if entry is not None:
+            entry["invocations"] += 1
+
+    # -- summaries --------------------------------------------------------
+
+    def phase_means(self) -> Dict[str, float]:
+        """Mean seconds per phase over the collected probe samples."""
+        if not self.phase_samples:
+            return {}
+        out: Dict[str, float] = {}
+        for ph in PHASES:
+            vals = [s[ph] for s in self.phase_samples if ph in s]
+            if vals:
+                out[ph] = float(np.mean(vals))
+        return out
+
+    def wire_totals(self) -> Dict[str, Dict[str, float]]:
+        """Measured bytes per collective for the whole run: the static
+        per-chunk budget (``hlo_analysis.collective_budget`` of the
+        compiled chunk) scaled by how many times each compiled chunk
+        actually ran."""
+        totals: Dict[str, Dict[str, float]] = {}
+        for entry in self.wire.values():
+            inv = entry["invocations"]
+            for op, b in entry["per_chunk"].items():
+                t = totals.setdefault(op, {"count": 0.0, "bytes": 0.0})
+                t["count"] += b["count"] * inv
+                t["bytes"] += b["bytes"] * inv
+        return totals
+
+
+# ---------------------------------------------------------------------------
+# Phase probes (chunk-boundary timing brackets)
+# ---------------------------------------------------------------------------
+
+
+def make_phase_probes(driver) -> Dict[str, Any]:
+    """Build the four jitted phase probes for a driver's configuration.
+
+    Each probe runs ONE phase of a cycle on an ensemble snapshot —
+    exactly the code the fused cycle body runs (same propagate mode,
+    same exchange scheme/sweep-table gather), but standalone so a
+    ``block_until_ready`` fence brackets that phase alone.  Probes take
+    the ensemble as an argument and return fresh arrays: they cannot
+    mutate the run (JAX arrays are immutable), so sampling them between
+    chunks leaves the trajectory bitwise unchanged.
+
+    For sharded runs the probes execute on the global (GSPMD-partitioned)
+    arrays outside the ``shard_map`` — per-phase times are then an
+    upper bound including any resharding XLA inserts; the wire ledger,
+    not the probe, is the communication truth.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import failures as F
+    from repro.core import patterns
+    from repro.core.controls import ctrl_for_assignment
+
+    engine, grid, cfg = driver.engine, driver.grid, driver.cfg
+    execution = driver.execution
+    md_steps = cfg.md_steps_per_cycle
+    window_steps = max(int(md_steps * cfg.async_window), 1)
+    policy = "relaunch" if cfg.relaunch_failed else "continue"
+    has_features = driver.capabilities["replica_features"]
+
+    def _steps(ens):
+        if cfg.pattern == "asynchronous":
+            max_steps = 2 * window_steps
+            n_steps = jnp.clip(
+                jnp.round(window_steps * ens.speed).astype(jnp.int32),
+                1, max_steps)
+        else:
+            max_steps = md_steps
+            n_steps = jnp.full(ens.assignment.shape, md_steps, jnp.int32)
+        return n_steps, max_steps
+
+    def probe_propagate(ens):
+        k_md = jax.random.split(ens.rng, 3)[0]
+        n_steps, max_steps = _steps(ens)
+        return patterns._propagate(engine, ens, grid, n_steps, k_md,
+                                   execution, max_steps, driver.mesh)
+
+    def probe_features(ens):
+        if has_features:
+            return engine.replica_features(ens.state)
+        ctrl = ctrl_for_assignment(grid, ens.assignment,
+                                   getattr(engine, "ctrl_keys", None))
+        return engine.energy(ens.state, ctrl)
+
+    def probe_exchange(ens):
+        k_ex = jax.random.split(ens.rng, 3)[1]
+        n_dims = len(grid.dims)
+        dim_index = jnp.mod(ens.cycle, n_dims)
+        parity = jnp.mod(ens.cycle // n_dims, 2)
+        return patterns._exchange(engine, ens.state, grid, ens.assignment,
+                                  dim_index, parity, k_ex,
+                                  cfg.exchange_scheme, ready=ens.alive)
+
+    def probe_detect_recover(ens):
+        return F.detect_recover(engine, ens, policy, ens.state)
+
+    return {
+        "propagate": jax.jit(probe_propagate),
+        "features": jax.jit(probe_features),
+        "exchange": jax.jit(probe_exchange),
+        "detect_recover": jax.jit(probe_detect_recover),
+    }
+
+
+def sample_phases(probes: Dict[str, Any], ens,
+                  warmed: set) -> Dict[str, float]:
+    """Run each probe on ``ens`` and return wall seconds per phase.
+
+    The first execution of a probe compiles it — that call is used as
+    the warm-up and a second, compile-free call is the one timed
+    (``warmed`` tracks which probes have compiled; pass the same set
+    across samples).
+    """
+    import jax
+
+    out: Dict[str, float] = {}
+    for name in PHASES:
+        fn = probes[name]
+        if name not in warmed:
+            jax.block_until_ready(fn(ens))      # compile + warm
+            warmed.add(name)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(ens))
+        out[name] = time.perf_counter() - t0
+    return out

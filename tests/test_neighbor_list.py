@@ -300,6 +300,42 @@ def test_cell_capacity_overflow_is_recorded():
     assert int(np.asarray(dropped).min()) > 0
 
 
+def test_cell_capacity_cap_spills_to_nb_overflow():
+    """Capping cell capacity bounds build memory deterministically;
+    atoms past the cap are dropped by the binning pass and every lost
+    pair must land in the per-cycle ``nb_overflow`` stat — never
+    silent."""
+    # suggest_cell_capacity honors an explicit ceiling, floored at 1
+    rng = np.random.default_rng(1)
+    spread = rng.uniform(0.0, 40.0, (256, 3))
+    gd = NB.suggest_grid_dims(spread.max(0) - spread.min(0) + 2 * R_LIST,
+                              R_LIST)
+    free = NB.suggest_cell_capacity(spread, R_LIST, gd)
+    assert NB.suggest_cell_capacity(spread, R_LIST, gd,
+                                    max_capacity=4) == min(free, 4)
+    assert NB.suggest_cell_capacity(spread, R_LIST, gd,
+                                    max_capacity=0) == 1
+
+    # an undersized explicit cap on the engine: the run completes and
+    # the driver surfaces the dropped pairs; an ample cap reports zero
+    cfg = RepExConfig(dimensions=(("temperature", 4),),
+                      md_steps_per_cycle=3, n_cycles=4)
+    mk = lambda cap: MDEngine(system=chain_molecule(64),
+                              nonbonded="sparse", nlist_build="cell",
+                              cell_capacity=cap)
+    tight = REMDDriver(mk(2), cfg)
+    ens = tight.run_fused(tight.init(), chunk_cycles=2)
+    assert tight.history[-1]["nb_overflow"] > 0
+    assert bool(np.all(np.isfinite(np.asarray(ens.state["pos"]))))
+    ample = REMDDriver(mk(64), cfg)
+    ample.run_fused(ample.init(), chunk_cycles=2)
+    assert ample.history[-1]["nb_overflow"] == 0.0
+
+    # nonsense caps are rejected up front, not at trace time
+    with pytest.raises(ValueError):
+        MDEngine(nonbonded="sparse", nlist_build="cell", cell_capacity=0)
+
+
 # -- configuration guards --------------------------------------------------
 
 

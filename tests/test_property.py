@@ -188,6 +188,113 @@ def test_deo_parity_sweeps_touch_disjoint_pairs(shape, seed):
             assert tab.count[d, p] == len(left)
 
 
+# ---------------------------------------------------------------------------
+# Telemetry accounting invariants (repro.obs)
+# ---------------------------------------------------------------------------
+
+
+@SETTINGS
+@given(
+    n_ctrl=st.sampled_from([2, 4, 6]),
+    n_cycles=st.integers(1, 40),
+    split=st.integers(1, 39),
+    seed=st.integers(0, 2**30),
+)
+def test_occupancy_accounting(n_ctrl, n_cycles, split, seed):
+    """Rung-occupancy rows sum to n_cycles; folding the trace in chunks
+    equals folding it in one shot; the counts are invariant under any
+    permutation of the cycle axis (occupancy is a multiset)."""
+    from repro.obs import accumulate_occupancy
+
+    rng = np.random.default_rng(seed)
+    trace = np.stack([rng.permutation(n_ctrl) for _ in range(n_cycles)])
+    occ = accumulate_occupancy(trace, n_ctrl)
+    np.testing.assert_array_equal(occ.sum(axis=1),
+                                  np.full(n_ctrl, n_cycles))
+    # each cycle row is a permutation -> columns sum to n_cycles too
+    np.testing.assert_array_equal(occ.sum(axis=0),
+                                  np.full(n_ctrl, n_cycles))
+    s = min(split, n_cycles)
+    occ_chunked = accumulate_occupancy(trace[:s], n_ctrl)
+    occ_chunked = accumulate_occupancy(trace[s:], n_ctrl, occ_chunked)
+    np.testing.assert_array_equal(occ, occ_chunked)
+    perm = rng.permutation(n_cycles)
+    np.testing.assert_array_equal(
+        occ, accumulate_occupancy(trace[perm], n_ctrl))
+
+
+@SETTINGS
+@given(
+    n_ctrl=st.sampled_from([2, 3, 5]),
+    n_cycles=st.integers(1, 60),
+    split=st.integers(1, 59),
+    seed=st.integers(0, 2**30),
+)
+def test_round_trip_accounting(n_ctrl, n_cycles, split, seed):
+    """Round-trip counts: chunked feeding == one-shot feeding, and every
+    completed trip needs at least one bottom visit, one top visit, and a
+    return to bottom — so rt <= min(bottom visits, top visits) per
+    replica, under any trace."""
+    from repro.obs import accumulate_occupancy, round_trip_fold
+
+    rng = np.random.default_rng(seed)
+    trace = np.stack([rng.permutation(n_ctrl) for _ in range(n_cycles)])
+    _, rt = round_trip_fold(trace, n_ctrl)
+    s = min(split, n_cycles)
+    phase, rt_chunked = round_trip_fold(trace[:s], n_ctrl)
+    _, rt_chunked = round_trip_fold(trace[s:], n_ctrl, phase, rt_chunked)
+    np.testing.assert_array_equal(rt, rt_chunked)
+    occ = accumulate_occupancy(trace, n_ctrl)
+    assert np.all(rt >= 0)
+    assert np.all(rt <= np.minimum(occ[:, 0], occ[:, n_ctrl - 1]))
+
+
+def test_round_trip_known_sequence():
+    """Deterministic oracle: one replica walking 0 -> top -> 0 -> top -> 0
+    completes exactly two round trips; a walk that never touches the top
+    completes none."""
+    from repro.obs import round_trip_fold
+
+    walk = np.asarray([[0], [1], [2], [1], [0], [2], [0]])  # n_ctrl = 3
+    _, rt = round_trip_fold(walk, 3)
+    assert rt.tolist() == [2]
+    _, rt0 = round_trip_fold(np.asarray([[0], [1], [0], [1], [0]]), 3)
+    assert rt0.tolist() == [0]
+
+
+@SETTINGS
+@given(
+    n_ctrl=st.sampled_from([2, 4, 6, 7]),
+    seed=st.integers(0, 2**30),
+)
+def test_pair_counters_match_deo_schedule(n_ctrl, seed):
+    """The per-pair telemetry rows ride the fused cycle: accepts <=
+    attempts per slot, and the attempt row IS the DEO parity schedule —
+    slot w attempted iff the stacked PairTable marks it valid for the
+    cycle's (dim, parity)."""
+    from repro.core import patterns as P
+    from repro.core.ensemble import make_ensemble
+    from repro.md import HarmonicEngine
+
+    grid = build_grid(RepExConfig(dimensions=(("temperature", n_ctrl),)))
+    eng = HarmonicEngine()
+    ens = make_ensemble(eng, jax.random.key(seed), n_ctrl)
+    tab = grid.pair_table
+    for cycle in range(4):
+        parity = cycle % 2          # one dim -> dim_index 0, parity flips
+        ens, stats = P.fused_cycle(eng, grid, ens, pattern="synchronous",
+                                   md_steps=2, window_steps=1,
+                                   telemetry_rows=True)
+        att = np.asarray(stats["pair_attempt"])
+        acc = np.asarray(stats["pair_accept"])
+        np.testing.assert_array_equal(att, tab.valid[0, parity])
+        assert np.all(acc <= att)
+        assert np.all((acc == 0) | (acc == 1))
+        # the scalar counters are the row sums
+        assert float(stats["attempted"]) == att.sum()
+        assert float(stats["accepted"]) == acc.sum()
+
+
 @SETTINGS
 @given(seed=st.integers(0, 2**30))
 def test_detailed_balance_two_level(seed):
