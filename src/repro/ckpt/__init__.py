@@ -1,2 +1,3 @@
-from repro.ckpt.checkpoint import (CheckpointManager, load_checkpoint,
+from repro.ckpt.checkpoint import (CheckpointCorruptError, CheckpointError,
+                                   CheckpointManager, load_checkpoint,
                                    save_checkpoint)

@@ -1,16 +1,24 @@
-"""Atomic, mesh-independent checkpoint/restart.
+"""Atomic, verified, mesh-independent checkpoint/restart.
 
 Fault-tolerance substrate for both the trainer and the RepEx driver:
 
   * atomic:     write to ``<dir>.tmp`` then ``os.rename`` — a crash mid-write
                 never corrupts the previous checkpoint;
+  * verified:   every array payload carries a CRC32 in the manifest
+                (``manifest_version`` 2), recomputed at load — bit-rot,
+                truncation and torn writes are DETECTED, never silently
+                restored; :func:`load_checkpoint` walks back to the newest
+                INTACT step when the newest one fails verification;
   * mesh-independent: arrays are gathered to host and stored as plain
                 ``.npy`` payloads + a JSON manifest of the pytree, so a run
                 checkpointed on a 256-chip mesh restarts on 512 chips (or a
                 laptop) — the loader reshards onto whatever mesh is current
                 (this is what makes RepEx's Execution-Mode elasticity work
                 across restarts);
-  * versioned:  ``step-<n>`` directories, ``latest`` symlink, retention.
+  * versioned:  ``step-<n>`` directories, ``latest`` pointer file, retention.
+
+Failure taxonomy + the walk-back / escalation contract:
+docs/FAULT_TOLERANCE.md.
 
 Production note: on a real multi-host pod each host would write its own
 data-parallel shard (ocdbt-style); the manifest format already carries the
@@ -21,7 +29,9 @@ from __future__ import annotations
 import json
 import os
 import shutil
-from typing import Any, Dict, Optional
+import time
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +39,47 @@ import ml_dtypes
 import numpy as np
 
 _SPECIAL_DTYPES = {"bfloat16": ml_dtypes.bfloat16}
+
+# Bumped when the manifest layout changes.  Version 2 added per-array
+# ``crc32``; version-1 manifests (no checksums) still load — they simply
+# skip verification, so pre-existing checkpoints stay restartable.
+MANIFEST_VERSION = 2
+
+# Bounded retry around filesystem IO: transient errors (NFS hiccup, busy
+# volume) get _IO_RETRIES attempts with exponential backoff before the
+# error propagates.  Deterministic and short — never masks real failures.
+_IO_RETRIES = 3
+_IO_BACKOFF_S = 0.05
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint cannot be restored for a STRUCTURAL reason (missing
+    directory, tree/manifest key mismatch).  Not retried, no walk-back:
+    the same mismatch would hold for every step."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """A checkpoint failed integrity verification (CRC mismatch,
+    truncated payload, unreadable manifest) and no intact fallback step
+    existed.  Carries ``reasons`` — one line per candidate tried."""
+
+    def __init__(self, message: str, reasons: Optional[List[str]] = None):
+        super().__init__(message)
+        self.reasons = reasons or []
+
+
+def _retry_io(fn, what: str):
+    """Run ``fn()`` with bounded retry-with-backoff on OSError."""
+    last = None
+    for attempt in range(_IO_RETRIES):
+        try:
+            return fn()
+        except OSError as e:          # noqa: PERF203 — bounded, tiny loop
+            last = e
+            if attempt + 1 < _IO_RETRIES:
+                time.sleep(_IO_BACKOFF_S * (2 ** attempt))
+    raise CheckpointError(
+        f"{what} failed after {_IO_RETRIES} attempts: {last}") from last
 
 
 def _encode(leaf):
@@ -52,6 +103,10 @@ def _decode(arr: np.ndarray, tag: str):
     return jnp.asarray(arr)
 
 
+def _crc32(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
 def _flatten(tree) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -72,23 +127,31 @@ def _path_str(p) -> str:
 
 def save_checkpoint(directory: str, step: int, tree,
                     extra: Optional[dict] = None) -> str:
-    """Atomic save; returns the final checkpoint path."""
-    os.makedirs(directory, exist_ok=True)
+    """Atomic, checksummed save; returns the final checkpoint path."""
+    _retry_io(lambda: os.makedirs(directory, exist_ok=True),
+              f"creating checkpoint directory {directory!r}")
     final = os.path.join(directory, f"step-{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     flat = _flatten(tree)
-    manifest = {"step": step, "extra": extra or {}, "arrays": {}}
+    manifest = {"step": step, "manifest_version": MANIFEST_VERSION,
+                "extra": extra or {}, "arrays": {}}
     for i, (key, leaf) in enumerate(sorted(flat.items())):
         arr, tag = _encode(leaf)
         fname = f"arr-{i:06d}.npy"
-        np.save(os.path.join(tmp, fname), arr)
+        _retry_io(lambda a=arr, f=fname: np.save(os.path.join(tmp, f), a),
+                  f"writing checkpoint array {fname!r}")
         manifest["arrays"][key] = {"file": fname, "dtype": tag,
-                                   "shape": list(arr.shape)}
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+                                   "shape": list(arr.shape),
+                                   "crc32": _crc32(arr)}
+
+    def _write_manifest():
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+
+    _retry_io(_write_manifest, "writing checkpoint manifest")
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)                       # atomic publish
@@ -99,24 +162,140 @@ def save_checkpoint(directory: str, step: int, tree,
     return final
 
 
-def load_checkpoint(directory: str, tree_like,
-                    step: Optional[int] = None,
-                    shardings=None):
-    """Restore into the structure of ``tree_like``; optionally reshard."""
-    if step is None:
-        with open(os.path.join(directory, "latest")) as f:
-            name = f.read().strip()
-        path = os.path.join(directory, name)
-    else:
-        path = os.path.join(directory, f"step-{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    flat_like = _flatten(tree_like)
+def _step_dirs(directory: str) -> List[str]:
+    """All complete ``step-*`` dirs, newest first."""
+    if not os.path.isdir(directory):
+        return []
+    names = [d for d in os.listdir(directory)
+             if d.startswith("step-") and not d.endswith(".tmp")
+             and os.path.isdir(os.path.join(directory, d))]
+    return sorted(names, reverse=True)
+
+
+def _candidate_steps(directory: str) -> List[str]:
+    """Restore candidates, newest-intact-first: the ``latest`` pointer's
+    target (when it exists AND points at a real dir — a retention-deleted
+    or torn pointer is simply skipped), then every ``step-*`` dir
+    descending."""
+    candidates: List[str] = []
+    latest = os.path.join(directory, "latest")
+    if os.path.exists(latest):
+        try:
+            with open(latest) as f:
+                name = f.read().strip()
+            if name and os.path.isdir(os.path.join(directory, name)):
+                candidates.append(name)
+        except OSError:
+            pass
+    for name in _step_dirs(directory):
+        if name not in candidates:
+            candidates.append(name)
+    return candidates
+
+
+def _load_step(path: str, flat_like: Dict[str, Any], verify: bool):
+    """Load + verify one step dir against the template's flat keys.
+
+    Raises :class:`CheckpointCorruptError` for integrity problems
+    (candidate for walk-back) and :class:`CheckpointError` for a tree
+    mismatch (structural — walk-back would not help, every step of this
+    run has the same tree)."""
+    mpath = os.path.join(path, "manifest.json")
+    try:
+        def _read():
+            with open(mpath) as f:
+                return json.load(f)
+        manifest = _retry_io(_read, f"reading manifest {mpath!r}")
+    except (CheckpointError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable manifest in {path!r}: {e}") from e
+    arrays = manifest.get("arrays")
+    if not isinstance(arrays, dict):
+        raise CheckpointCorruptError(f"manifest in {path!r} has no "
+                                     f"'arrays' table")
+
+    missing = sorted(set(flat_like) - set(arrays))
+    unexpected = sorted(set(arrays) - set(flat_like))
+    if missing or unexpected:
+        raise CheckpointError(
+            f"checkpoint {path!r} does not match the restore template "
+            f"(was it written by a different config?): "
+            f"missing from checkpoint: {missing or 'none'}; "
+            f"unexpected in checkpoint: {unexpected or 'none'}")
+
+    versioned = manifest.get("manifest_version", 1) >= 2
     out = {}
     for key in flat_like:
-        meta = manifest["arrays"][key]
-        arr = np.load(os.path.join(path, meta["file"]))
+        meta = arrays[key]
+        fpath = os.path.join(path, meta["file"])
+        try:
+            arr = _retry_io(lambda p=fpath: np.load(p),
+                            f"reading array {fpath!r}")
+        except (CheckpointError, ValueError, EOFError, OSError) as e:
+            raise CheckpointCorruptError(
+                f"unreadable/truncated array {fpath!r}: {e}") from e
+        if list(arr.shape) != list(meta.get("shape", arr.shape)):
+            raise CheckpointCorruptError(
+                f"array {fpath!r} shape {list(arr.shape)} != manifest "
+                f"{meta['shape']}")
+        if verify and versioned and "crc32" in meta:
+            got = _crc32(arr)
+            if got != meta["crc32"]:
+                raise CheckpointCorruptError(
+                    f"CRC mismatch for {key!r} in {path!r}: stored "
+                    f"{meta['crc32']:#010x}, recomputed {got:#010x}")
         out[key] = _decode(arr, meta["dtype"])
+    return out, manifest
+
+
+def load_checkpoint(directory: str, tree_like,
+                    step: Optional[int] = None,
+                    shardings=None, verify: bool = True,
+                    fallback: bool = True):
+    """Restore into the structure of ``tree_like``; optionally reshard.
+
+    Every array's CRC32 is verified against the manifest (``verify=True``;
+    version-1 manifests have no checksums and skip it).  When ``step`` is
+    None the newest INTACT checkpoint is restored: a corrupt/truncated
+    newest step (or a stale ``latest`` pointer) walks back to the previous
+    step (``fallback=True``) instead of failing the restart.  An explicit
+    ``step`` or ``fallback=False`` disables walk-back.  A tree/manifest
+    key mismatch raises :class:`CheckpointError` naming the missing and
+    unexpected keys — it is structural, never walked back.
+    """
+    flat_like = _flatten(tree_like)
+    if step is not None:
+        candidates = [f"step-{step:08d}"]
+        fallback = False
+    else:
+        candidates = _candidate_steps(directory)
+        if not candidates:
+            raise CheckpointError(
+                f"no checkpoint found in {directory!r} (no 'latest' "
+                f"pointer and no step-* directories)")
+        if not fallback:
+            candidates = candidates[:1]
+
+    reasons: List[str] = []
+    out = manifest = None
+    for name in candidates:
+        path = os.path.join(directory, name)
+        if not os.path.isdir(path):
+            reasons.append(f"{name}: directory missing")
+            continue
+        try:
+            out, manifest = _load_step(path, flat_like, verify)
+            break
+        except CheckpointCorruptError as e:
+            reasons.append(f"{name}: {e}")
+            if not fallback:
+                raise
+    if out is None:
+        raise CheckpointCorruptError(
+            f"no intact checkpoint in {directory!r} — tried "
+            f"{len(reasons)} candidate(s):\n  " + "\n  ".join(reasons),
+            reasons=reasons)
+
     leaves_paths = jax.tree_util.tree_flatten_with_path(tree_like)[0]
     treedef = jax.tree.structure(tree_like)
     ordered = []
@@ -127,7 +306,7 @@ def load_checkpoint(directory: str, tree_like,
     if shardings is not None:
         restored = jax.tree.map(
             lambda a, s: jax.device_put(a, s), restored, shardings)
-    return restored, manifest["step"], manifest["extra"]
+    return restored, manifest["step"], manifest.get("extra", {})
 
 
 class CheckpointManager:
@@ -155,8 +334,25 @@ class CheckpointManager:
             shutil.rmtree(os.path.join(self.directory, old))
 
     def latest_step(self) -> Optional[int]:
+        """Newest restorable step number, or None.
+
+        The ``latest`` pointer is VALIDATED: if it is missing, torn, or
+        points at a step dir that retention (or an operator) deleted, the
+        ``step-*`` dirs are scanned instead of crashing — the pointer is
+        an optimization, the directory listing is the truth."""
         latest = os.path.join(self.directory, "latest")
-        if not os.path.exists(latest):
+        if os.path.exists(latest):
+            try:
+                with open(latest) as f:
+                    name = f.read().strip()
+                if os.path.isdir(os.path.join(self.directory, name)):
+                    return int(name.split("-")[1])
+            except (OSError, IndexError, ValueError):
+                pass
+        steps = _step_dirs(self.directory)
+        if not steps:
             return None
-        with open(latest) as f:
-            return int(f.read().strip().split("-")[1])
+        try:
+            return int(steps[0].split("-")[1])
+        except (IndexError, ValueError):
+            return None

@@ -187,6 +187,13 @@ class RepExConfig:
     # failure handling
     detect_failures: bool = True
     relaunch_failed: bool = True
+    # Escalation budget for the relaunch policy (docs/FAULT_TOLERANCE.md):
+    # 0 = unlimited relaunches (legacy behavior, the default).  With
+    # budget B > 0 a replica failing B consecutive cycles escalates from
+    # relaunch-own-backup to reinit-from-peer-rung, and after 2B
+    # consecutive failures to continue-degraded (masked out, ladder runs
+    # short) — a persistently-broken replica can no longer rewind forever.
+    relaunch_budget: int = 0
 
     @property
     def n_replicas(self) -> int:

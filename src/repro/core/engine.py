@@ -48,7 +48,12 @@ class SimulationEngine(Protocol):
         ...
 
     def is_failed(self, state: StateStack) -> jax.Array:
-        """(R,) bool — replica-level failure detection (NaN/divergence)."""
+        """(R,) bool — replica-level failure detection.  Every engine
+        flags non-finite state (NaN/inf); engines may declare additional
+        thresholds (kinetic-energy divergence, bond blow-up — see
+        ``repro.md.MDEngine(max_energy=..., max_bond_stretch=...)``) and
+        surface what they check via the duck-typed ``failure_detectors``
+        tuple (``engine_capabilities``)."""
         ...
 
 
@@ -137,4 +142,9 @@ def engine_capabilities(engine) -> Dict[str, Any]:
         # per-cycle driver stats.
         "nonbonded": getattr(engine, "nonbonded", None),
         "nb_stats": callable(getattr(engine, "nb_stats", None)),
+        # which failure detectors the engine's is_failed applies —
+        # ("nonfinite",) is the protocol minimum; threshold detectors
+        # (kinetic-energy divergence, bond blow-up) are opt-in per engine
+        "failure_detectors": tuple(
+            getattr(engine, "failure_detectors", ("nonfinite",))),
     }

@@ -22,6 +22,10 @@ class Ensemble(NamedTuple):
     speed: jax.Array           # (R,) f32: relative propagation speed
     alive: jax.Array           # (R,) bool: active replicas
     failures: jax.Array        # scalar int32: total failures recovered
+    relaunches: jax.Array      # (R,) int32: CONSECUTIVE failure streak per
+                               # replica — reset on any clean cycle; the
+                               # escalation ladder (relaunch -> peer reinit
+                               # -> degraded) is keyed on it
 
 
 def make_ensemble(engine, rng: jax.Array, n_replicas: int,
@@ -43,6 +47,7 @@ def make_ensemble(engine, rng: jax.Array, n_replicas: int,
         speed=speed,
         alive=jnp.ones(n_replicas, bool),
         failures=jnp.zeros((), jnp.int32),
+        relaunches=jnp.zeros(n_replicas, jnp.int32),
     )
 
 

@@ -1,4 +1,4 @@
-"""Replica-level fault tolerance: inject, detect, recover.
+"""Replica-level fault tolerance: inject, detect, recover, escalate.
 
 The paper's claim: "RepEx can either continue a simulation in case of
 replica failure or can relaunch a failed replica" — a failed replica never
@@ -6,23 +6,40 @@ takes down the simulation.  Here:
 
   * inject_failures  — test harness: corrupts a random subset of replica
                        states with NaN (models hardware fault / MD blow-up).
-  * detect           — engine.is_failed (NaN / divergence scan per replica).
+  * detect           — engine.is_failed (NaN / divergence / engine-declared
+                       thresholds, per replica).
   * recover          — policy 'relaunch': failed replicas are reset to their
                        last checkpointed state (trajectory rewind, keeps the
                        ladder full — paper's relaunch); policy 'continue':
                        failed replicas are marked dead and masked out of all
                        future exchanges (paper's continue; ladder runs
                        degraded).  Ensemble-level node failures are covered
-                       by the atomic checkpoint/restart in repro.ckpt.
+                       by the verified checkpoint/restart in repro.ckpt.
+
+Escalation ladder (``relaunch_budget`` B > 0; docs/FAULT_TOLERANCE.md):
+a replica's CONSECUTIVE failure streak rides the ensemble as
+``ens.relaunches`` (reset on any clean cycle).  Streak <= B relaunches
+from the replica's own backup (tier 1); B < streak <= 2B re-initializes
+from the NEXT ladder rung's backup state (tier 2 — a fresh, provably
+healthy configuration at a neighboring control point, the closest
+thermodynamic substitute); streak > 2B marks the replica dead and the
+ladder continues degraded (tier 3).  B = 0 (default) is the legacy
+unlimited-relaunch behavior, and tiers 2/3 are not even compiled — the
+sharded peer-hop ``ppermute`` only enters the program when a budget is
+set, so the collective census of a default run is unchanged.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.ensemble import Ensemble
+
+# the per-cycle escalation counters every detect/recover path emits —
+# fixed keys so fused-scan ys keep one shape across policies/budgets
+ESC_STAT_KEYS = ("failed", "esc_relaunch", "esc_reinit", "esc_dead")
 
 
 def inject_failures(ens: Ensemble, rng: jax.Array, rate: float,
@@ -56,64 +73,147 @@ def detect(engine, ens: Ensemble) -> jax.Array:
     return engine.is_failed(ens.state) & ens.alive
 
 
+def _mend(state, donor_state, mask_rows: jax.Array):
+    """Replace ``state`` rows flagged in ``mask_rows`` with the donor's."""
+    n = mask_rows.shape[0]
+
+    def one(cur, don):
+        if not hasattr(cur, "ndim") or cur.ndim < 1 or cur.shape[0] != n:
+            return cur
+        shape = (n,) + (1,) * (cur.ndim - 1)
+        return jnp.where(mask_rows.reshape(shape), don, cur)
+
+    return jax.tree.map(one, state, donor_state)
+
+
+def _escalate_masks(failed: jax.Array, streak: jax.Array, budget: int):
+    """Split the failure mask into the three escalation tiers."""
+    if budget <= 0:
+        zeros = jnp.zeros_like(failed)
+        return failed, zeros, zeros
+    relaunch = failed & (streak <= budget)
+    reinit = failed & (streak > budget) & (streak <= 2 * budget)
+    dead = failed & (streak > 2 * budget)
+    return relaunch, reinit, dead
+
+
+def _esc_stats(failed, relaunch, reinit, dead) -> Dict[str, jax.Array]:
+    c = lambda m: jnp.sum(m.astype(jnp.int32))  # noqa: E731
+    return {"failed": c(failed), "esc_relaunch": c(relaunch),
+            "esc_reinit": c(reinit), "esc_dead": c(dead)}
+
+
 def recover(engine, ens: Ensemble, failed: jax.Array, policy: str,
             backup_state: Any) -> Tuple[Ensemble, jax.Array]:
-    """Apply the recovery policy. Returns (ensemble, n_failed)."""
+    """Apply the recovery policy (legacy tier-1-only entry point).
+    Returns (ensemble, n_failed)."""
     n_failed = jnp.sum(failed.astype(jnp.int32))
+    streak = jnp.where(failed, ens.relaunches + 1, 0)
     if policy == "continue":
         return ens._replace(alive=ens.alive & ~failed,
-                            failures=ens.failures + n_failed), n_failed
+                            failures=ens.failures + n_failed,
+                            relaunches=streak), n_failed
 
     # relaunch: rewind failed replicas to the backup (last good) state
-    def mend(cur, bak):
-        if not hasattr(cur, "ndim") or cur.ndim < 1 \
-                or cur.shape[0] != failed.shape[0]:
-            return cur
-        shape = (failed.shape[0],) + (1,) * (cur.ndim - 1)
-        return jnp.where(failed.reshape(shape), bak, cur)
-
-    state = jax.tree.map(mend, ens.state, backup_state)
+    state = _mend(ens.state, backup_state, failed)
     return ens._replace(state=state,
-                        failures=ens.failures + n_failed), n_failed
+                        failures=ens.failures + n_failed,
+                        relaunches=streak), n_failed
 
 
-def detect_recover(engine, ens: Ensemble, policy: str, backup_state: Any
-                   ) -> Tuple[Ensemble, Any, jax.Array]:
-    """Fully device-side detect + recover + backup-carry (scan-body safe).
+def _peer_backup(backup_state, axis_name=None, n_shards: int = 1):
+    """Tier-2 donor: replica i's donor is the NEXT ladder rung's backup,
+    peer(i) = backup[(i + 1) mod R].  Unsharded this is a roll; sharded,
+    each shard rolls its local block and fills its last row with the next
+    shard's first backup row via ONE boundary ``lax.ppermute`` hop (the
+    existing ladder ring, reverse direction: shard s receives from s+1).
+    The donor rows are exact copies either way, so escalation decisions
+    are bitwise-identical across mesh shapes."""
+    if axis_name is None or n_shards == 1:
+        def roll(b):
+            if not hasattr(b, "ndim") or b.ndim < 1:
+                return b
+            return jnp.roll(b, -1, axis=0)
+        return jax.tree.map(roll, backup_state)
+
+    from repro.launch.mesh import ladder_neighbor_perms
+    perm = ladder_neighbor_perms(n_shards, reverse=True)
+
+    def roll(b):
+        if not hasattr(b, "ndim") or b.ndim < 1:
+            return b
+        rolled = jnp.roll(b, -1, axis=0)
+        first = jax.lax.ppermute(b[:1], axis_name, perm=perm)
+        return rolled.at[-1:].set(first)
+
+    return jax.tree.map(roll, backup_state)
+
+
+def detect_recover(engine, ens: Ensemble, policy: str, backup_state: Any,
+                   relaunch_budget: int = 0
+                   ) -> Tuple[Ensemble, Any, Dict[str, jax.Array]]:
+    """Fully device-side detect + escalate + recover + backup-carry
+    (scan-body safe).
 
     Replicates the driver's host logic with zero host round-trips:
     ``recover`` applied to an all-False failure mask is the identity, so it
     runs unconditionally; the backup advances to the post-cycle state only
     on clean cycles (any failure freezes it, exactly like the host path).
-    Returns (ensemble, new_backup_state, n_failed).
+    Returns (ensemble, new_backup_state, stats) — ``stats`` carries the
+    :data:`ESC_STAT_KEYS` int32 scalars.
     """
     failed = detect(engine, ens)
     any_failed = jnp.any(failed)
-    new_ens, n_failed = recover(engine, ens, failed, policy, backup_state)
+    n_failed = jnp.sum(failed.astype(jnp.int32))
+    streak = jnp.where(failed, ens.relaunches + 1, 0)
+
+    if policy == "continue":
+        new_ens = ens._replace(alive=ens.alive & ~failed,
+                               failures=ens.failures + n_failed,
+                               relaunches=streak)
+        zeros = jnp.zeros_like(failed)
+        stats = _esc_stats(failed, zeros, zeros, failed)
+    else:
+        relaunch, reinit, dead = _escalate_masks(failed, streak,
+                                                 relaunch_budget)
+        state = _mend(ens.state, backup_state, relaunch)
+        alive = ens.alive
+        if relaunch_budget > 0:     # tiers 2/3 compile only when budgeted
+            state = _mend(state, _peer_backup(backup_state), reinit)
+            alive = alive & ~dead
+        new_ens = ens._replace(state=state, alive=alive,
+                               failures=ens.failures + n_failed,
+                               relaunches=streak)
+        stats = _esc_stats(failed, relaunch, reinit, dead)
+
     new_backup = jax.tree.map(
         lambda b, s: jnp.where(any_failed, b, s), backup_state,
         new_ens.state)
-    return new_ens, new_backup, n_failed
+    return new_ens, new_backup, stats
 
 
 def detect_recover_sharded(engine, ens: Ensemble, policy: str,
                            backup_state: Any, axis_name: str,
-                           n_shards: int, fail_row: jax.Array = None
-                           ) -> Tuple[Ensemble, Any, jax.Array]:
+                           n_shards: int, fail_row: jax.Array = None,
+                           relaunch_budget: int = 0
+                           ) -> Tuple[Ensemble, Any, Dict[str, jax.Array]]:
     """:func:`detect_recover` inside a replica-sharded cycle body.
 
     ``ens.state`` / ``backup_state`` hold only this shard's replica
-    block; ``ens.alive`` / ``ens.failures`` are replicated control
-    plane.  ``fail_row`` is the replicated (R,) raw failure mask the
-    exchange phase already moved across devices this cycle (its halo
-    ring / legacy gather runs on the same post-propagate state, and
-    exchange never mutates state) — when given, recovery adds ZERO
-    cross-device traffic; when ``None`` (standalone use) detection is
-    local and the mask is all-gathered here.  Every shard agrees on
-    ``alive``, the failure counter, and whether the (local) backup
-    freezes this cycle.  Decisions and counters match the unsharded
-    :func:`detect_recover` bitwise; the state mend is a per-replica
-    ``where`` on local rows.
+    block; ``ens.alive`` / ``ens.failures`` / ``ens.relaunches`` are
+    replicated control plane.  ``fail_row`` is the replicated (R,) raw
+    failure mask the exchange phase already moved across devices this
+    cycle (its halo ring / legacy gather runs on the same post-propagate
+    state, and exchange never mutates state) — when given, tier-1
+    recovery adds ZERO cross-device traffic; when ``None`` (standalone
+    use) detection is local and the mask is all-gathered here.  Every
+    shard agrees on ``alive``, the counters, and whether the (local)
+    backup freezes this cycle.  Decisions and counters match the
+    unsharded :func:`detect_recover` bitwise; the state mend is a
+    per-replica ``where`` on local rows.  With ``relaunch_budget`` set,
+    tier-2 peer reinit adds exactly one boundary ``ppermute`` of a
+    single backup row per state leaf (``_peer_backup``); with the
+    default budget 0 the compiled program is unchanged.
     """
     from repro.core.modes import shard_rows
     if fail_row is not None:
@@ -125,23 +225,31 @@ def detect_recover_sharded(engine, ens: Ensemble, policy: str,
         failed = jax.lax.all_gather(failed_local, axis_name, tiled=True)
     any_failed = jnp.any(failed)
     n_failed = jnp.sum(failed.astype(jnp.int32))
+    streak = jnp.where(failed, ens.relaunches + 1, 0)
 
     if policy == "continue":
         new_ens = ens._replace(alive=ens.alive & ~failed,
-                               failures=ens.failures + n_failed)
+                               failures=ens.failures + n_failed,
+                               relaunches=streak)
+        zeros = jnp.zeros_like(failed)
+        stats = _esc_stats(failed, zeros, zeros, failed)
     else:
-        def mend(cur, bak):
-            if not hasattr(cur, "ndim") or cur.ndim < 1 \
-                    or cur.shape[0] != failed_local.shape[0]:
-                return cur
-            shape = (failed_local.shape[0],) + (1,) * (cur.ndim - 1)
-            return jnp.where(failed_local.reshape(shape), bak, cur)
-
-        state = jax.tree.map(mend, ens.state, backup_state)
-        new_ens = ens._replace(state=state,
-                               failures=ens.failures + n_failed)
+        relaunch, reinit, dead = _escalate_masks(failed, streak,
+                                                 relaunch_budget)
+        state = _mend(ens.state, backup_state,
+                      shard_rows(relaunch, axis_name, n_shards))
+        alive = ens.alive
+        if relaunch_budget > 0:
+            peer = _peer_backup(backup_state, axis_name, n_shards)
+            state = _mend(state, peer,
+                          shard_rows(reinit, axis_name, n_shards))
+            alive = alive & ~dead
+        new_ens = ens._replace(state=state, alive=alive,
+                               failures=ens.failures + n_failed,
+                               relaunches=streak)
+        stats = _esc_stats(failed, relaunch, reinit, dead)
 
     new_backup = jax.tree.map(
         lambda b, s: jnp.where(any_failed, b, s), backup_state,
         new_ens.state)
-    return new_ens, new_backup, n_failed
+    return new_ens, new_backup, stats

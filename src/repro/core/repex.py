@@ -77,6 +77,10 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+import dataclasses
+
+import numpy as np
+
 from repro.config import RepExConfig
 from repro.core import failures as F
 from repro.core import patterns
@@ -84,8 +88,17 @@ from repro.core.controls import ControlGrid, build_grid
 from repro.core.engine import NB_STAT_KEYS, engine_capabilities
 from repro.core.ensemble import Ensemble, make_ensemble
 from repro.core.modes import auto_mode
-from repro.ckpt import CheckpointManager
+from repro.ckpt import CheckpointError, CheckpointManager, load_checkpoint
 from repro.obs import build_report
+
+# checkpoint 'extra' schema carried alongside the ensemble payload (the
+# host-side driver state resume() restores); bump when the layout changes
+CKPT_DRIVER_SCHEMA = 1
+
+# config fields that do NOT affect the per-cycle trajectory — a resume may
+# differ in these (e.g. extending a run's length) without invalidating the
+# bitwise-resume contract
+_CFG_RESUME_EXEMPT = ("n_cycles",)
 
 
 class REMDDriver:
@@ -130,6 +143,9 @@ class REMDDriver:
         self._phase_probes = None
         self._probe_warmed: set = set()
         self._wire_budgets: Dict[int, Any] = {}
+        # (backup, fail_key) restored by resume()/restore(), consumed by
+        # the next run*() call so the scan carry continues bit-exactly
+        self._resume_carry = None
 
     # -- telemetry plumbing ------------------------------------------------
 
@@ -212,8 +228,8 @@ class REMDDriver:
         # Backup carry for relaunch recovery: a reference is enough — JAX
         # arrays are immutable, so the snapshot can never be mutated out
         # from under us.  The carry only advances on clean cycles.
-        backup = ens.state
-        fail_key = jax.random.key(self.cfg.seed + 999)
+        backup, fail_key = self._start_carry(ens)
+        dr = self._detect_recover_fn()
 
         for c in range(n_cycles):
             t0 = time.perf_counter()
@@ -238,16 +254,12 @@ class REMDDriver:
             # still reports its overflow even after relaunch rewinds it
             nb_state = new_ens.state
 
-            # failure detection + recovery
+            # failure detection + escalation + recovery: the SAME jitted
+            # detect_recover the fused scan body runs (one code path, so
+            # the escalation ladder cannot drift between run paths)
             t2 = time.perf_counter()
-            failed = jax.device_get(F.detect(self.engine, new_ens))
-            if failed.any():
-                policy = ("relaunch" if self.cfg.relaunch_failed
-                          else "continue")
-                new_ens, _ = F.recover(self.engine, new_ens,
-                                       jnp.asarray(failed), policy, backup)
-            else:
-                backup = new_ens.state
+            new_ens, backup, esc = dr(new_ens, backup)
+            esc = {k: int(v) for k, v in jax.device_get(esc).items()}
             t_recover = time.perf_counter() - t2
 
             # bookkeeping (T_data: pull scalars to host)
@@ -277,7 +289,10 @@ class REMDDriver:
                 "t_recover": t_recover, "t_data": t_data,
                 "accept": float(s["accepted"]),
                 "attempt": float(s["attempted"]),
-                "failed": int(failed.sum()),
+                "failed": esc["failed"],
+                "esc_relaunch": esc["esc_relaunch"],
+                "esc_reinit": esc["esc_reinit"],
+                "esc_dead": esc["esc_dead"],
                 "assignment": assignment,
                 "nb_overflow": float(nb["nb_overflow"]),
                 "nb_rebuilds": float(nb["nb_rebuilds"]),
@@ -295,7 +310,7 @@ class REMDDriver:
                     t_cycle=t_step, t_data=t_data, t_prep=t_prep)
 
             if self.ckpt is not None:
-                self.ckpt.maybe_save(cyc, ens._asdict())
+                self._save_ckpt(cyc, ens, backup, fail_key)
             if verbose:
                 acc = (s["accepted"] / max(s["attempted"], 1)) * 100
                 print(f"cycle {cyc:4d} dim {dim_index} "
@@ -347,13 +362,15 @@ class REMDDriver:
                 telemetry_rows=obs_rows)
             fail_row = stats.pop("_fail_row", None)
             if sharded:
-                new_ens, backup, n_failed = F.detect_recover_sharded(
+                new_ens, backup, esc = F.detect_recover_sharded(
                     self.engine, new_ens, policy, backup, axis_name,
-                    n_shards, fail_row=fail_row)
+                    n_shards, fail_row=fail_row,
+                    relaunch_budget=cfg.relaunch_budget)
             else:
-                new_ens, backup, n_failed = F.detect_recover(
-                    self.engine, new_ens, policy, backup)
-            ys = dict(stats, cycle=cyc, failed=n_failed)
+                new_ens, backup, esc = F.detect_recover(
+                    self.engine, new_ens, policy, backup,
+                    relaunch_budget=cfg.relaunch_budget)
+            ys = dict(stats, cycle=cyc, **esc)
             return (new_ens, backup, fail_key), ys
 
         def chunk(ens, backup, fail_key):
@@ -392,8 +409,7 @@ class REMDDriver:
         """
         if chunk_cycles < 1:
             raise ValueError(f"chunk_cycles must be >= 1, got {chunk_cycles}")
-        backup = ens.state
-        fail_key = jax.random.key(self.cfg.seed + 999)
+        backup, fail_key = self._start_carry(ens)
         ens = self._chunk_loop(ens, backup, fail_key,
                                n_cycles or self.cfg.n_cycles, chunk_cycles,
                                verbose, self._fused_chunk_fn)
@@ -498,10 +514,8 @@ class REMDDriver:
             raise ValueError(f"chunk_cycles must be >= 1, got {chunk_cycles}")
         R = self.grid.n_ctrl
         if mesh is None:
-            n = jax.device_count()
-            while R % n:
-                n -= 1
-            mesh = make_replica_mesh(n)
+            from repro.launch.mesh import best_replica_shards
+            mesh = make_replica_mesh(best_replica_shards(R))
         if "replica" not in mesh.shape:
             raise ValueError(f"run_sharded needs a mesh with a 'replica' "
                              f"axis, got axes {tuple(mesh.shape)}")
@@ -520,10 +534,14 @@ class REMDDriver:
                 f"API required by run_sharded: {missing} (see "
                 f"repro.core.engine optional extensions)")
 
-        ens = jax.device_put(ens, ensemble_shardings(mesh, ens))
-        backup = ens.state
-        fail_key = jax.device_put(jax.random.key(self.cfg.seed + 999),
-                                  NamedSharding(mesh, P()))
+        shardings = ensemble_shardings(mesh, ens)
+        ens = jax.device_put(ens, shardings)
+        # a resumed carry may live on the host / a DIFFERENT mesh (elastic
+        # restart): place it like a fresh one — backup shards with the
+        # state, the failure key is replicated
+        backup, fail_key = self._start_carry(ens)
+        backup = jax.device_put(backup, shardings.state)
+        fail_key = jax.device_put(fail_key, NamedSharding(mesh, P()))
         ens = self._chunk_loop(
             ens, backup, fail_key, n_cycles or self.cfg.n_cycles,
             chunk_cycles, verbose,
@@ -562,6 +580,9 @@ class REMDDriver:
             att = ys["attempted"].tolist()
             cycles = ys["cycle"].tolist()
             failed = ys["failed"].tolist()
+            esc_rel = ys["esc_relaunch"].tolist()
+            esc_rei = ys["esc_reinit"].tolist()
+            esc_dead = ys["esc_dead"].tolist()
             rfrac = ys["ready_frac"].tolist()
             overfl = ys["nb_overflow"].tolist()
             rebuilds = ys["nb_rebuilds"].tolist()
@@ -577,7 +598,9 @@ class REMDDriver:
                     "t_step": t_step, "t_prep": 0.0,
                     "t_recover": 0.0, "t_data": t_d,
                     "accept": acc[i], "attempt": att[i],
-                    "failed": failed[i], "ready_frac": rfrac[i],
+                    "failed": failed[i], "esc_relaunch": esc_rel[i],
+                    "esc_reinit": esc_rei[i], "esc_dead": esc_dead[i],
+                    "ready_frac": rfrac[i],
                     "assignment": assignment[i],
                     "nb_overflow": overfl[i],
                     "nb_rebuilds": rebuilds[i],
@@ -604,7 +627,7 @@ class REMDDriver:
             if self.ckpt is not None and self.ckpt.every > 0:
                 lo, hi = c0 + done - k, c0 + done - 1
                 if hi // self.ckpt.every > (lo - 1) // self.ckpt.every:
-                    self.ckpt.maybe_save(hi, ens._asdict(), force=True)
+                    self._save_ckpt(hi, ens, backup, fail_key, force=True)
             if verbose:
                 acc = sum(float(a) for a in ys["accepted"])
                 att = max(sum(float(a) for a in ys["attempted"]), 1.0)
@@ -617,11 +640,168 @@ class REMDDriver:
         return {k: (a / max(n, 1.0))
                 for k, (a, n) in self.acceptance.items()}
 
+    # -- fault tolerance: shared detect/recover + carry plumbing ----------
+
+    def _detect_recover_fn(self):
+        """The jitted detect/escalate/recover step ``run()`` shares with
+        the fused scan body (one code path — the escalation ladder cannot
+        drift between run paths)."""
+        key = ("detect_recover",)
+        if key in self._compiled:
+            return self._compiled[key]
+        policy = "relaunch" if self.cfg.relaunch_failed else "continue"
+        budget = self.cfg.relaunch_budget
+
+        def step(ens, backup):
+            return F.detect_recover(self.engine, ens, policy, backup,
+                                    relaunch_budget=budget)
+
+        jitted = jax.jit(step)
+        self._compiled[key] = jitted
+        return jitted
+
+    def _start_carry(self, ens: Ensemble):
+        """The scan carry's (backup, fail_key) start values: the pair a
+        resume()/restore() loaded from the checkpoint (consumed exactly
+        once), or the fresh-run values."""
+        carry, self._resume_carry = self._resume_carry, None
+        if carry is not None:
+            return carry
+        return ens.state, jax.random.key(self.cfg.seed + 999)
+
+    # -- checkpoint payload / driver-state extra --------------------------
+
+    def _ckpt_payload(self, ens: Ensemble, backup, fail_key):
+        """The FULL device-side restart state: the ensemble plus the scan
+        carry (recovery backup — which lags the ensemble whenever a
+        failure froze it — and the failure-injection key chain).  All
+        three are required for a bitwise-identical resume."""
+        return {"ensemble": ens._asdict(), "backup": backup,
+                "fail_key": fail_key}
+
+    def _cfg_fingerprint(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self.cfg)
+        for k in _CFG_RESUME_EXEMPT:
+            d.pop(k, None)
+        d["_failure_rate"] = float(self.failure_rate)
+        # JSON round-trip normalizes tuples -> lists so the fingerprint
+        # compares equal to what the manifest stored
+        import json as _json
+        return _json.loads(_json.dumps(d))
+
+    def _ckpt_extra(self) -> Dict[str, Any]:
+        """Host-side driver state riding the checkpoint manifest: cycle
+        history (with assignment rows), per-dim acceptance, telemetry
+        accumulators and the config fingerprint resume() validates."""
+        hist = []
+        for h in self.history:
+            h2 = dict(h)
+            if h2.get("assignment") is not None:
+                h2["assignment"] = np.asarray(h2["assignment"]).tolist()
+            hist.append(h2)
+        tel = self._tel
+        return {"repex": {
+            "schema": CKPT_DRIVER_SCHEMA,
+            "config": self._cfg_fingerprint(),
+            "acceptance": {k: [float(v[0]), float(v[1])]
+                           for k, v in self.acceptance.items()},
+            "history": hist,
+            "telemetry": tel.state_dict() if tel is not None else None,
+        }}
+
+    def _save_ckpt(self, step: int, ens: Ensemble, backup, fail_key,
+                   force: bool = False):
+        self.ckpt.maybe_save(step, self._ckpt_payload(ens, backup, fail_key),
+                             extra=self._ckpt_extra(), force=force)
+
+    # -- restart paths ----------------------------------------------------
+
+    def _load_ckpt(self, step: Optional[int] = None):
+        """Load the newest INTACT checkpoint into a template payload."""
+        ens_like = self.init()
+        like = self._ckpt_payload(ens_like, ens_like.state,
+                                  jax.random.key(0))
+        return load_checkpoint(self.ckpt.directory, like, step=step)
+
     def restore(self, ens_like: Ensemble) -> Optional[Ensemble]:
-        """Restart from the latest ensemble checkpoint (node-failure path)."""
+        """Restart from the latest ensemble checkpoint (node-failure path).
+
+        Returns just the ensemble (legacy API); the recovery backup and
+        failure-key carry are staged so the NEXT ``run*`` call continues
+        bit-exactly.  :meth:`resume` is the full-state restart that also
+        restores history/acceptance/telemetry."""
         if self.ckpt is None or self.ckpt.latest_step() is None:
             return None
-        from repro.ckpt import load_checkpoint
-        tree, step, _ = load_checkpoint(self.ckpt.directory,
-                                        ens_like._asdict())
-        return Ensemble(**tree)
+        tree, _, _ = self._load_ckpt()
+        self._resume_carry = (tree["backup"], tree["fail_key"])
+        return Ensemble(**tree["ensemble"])
+
+    def resume(self, via: str = "fused", n_cycles: Optional[int] = None,
+               chunk_cycles: int = 16, mesh=None,
+               step: Optional[int] = None,
+               verbose: bool = False) -> Ensemble:
+        """Continue a killed run from its newest intact checkpoint.
+
+        Restores the ensemble, the scan carry (recovery backup + failure
+        key chain) AND the host bookkeeping (cycle history, per-dim
+        acceptance, telemetry accumulators), then runs the remaining
+        ``n_cycles - cycle`` cycles via ``via`` in {"run", "fused",
+        "sharded"}.  The stitched run's discrete trajectory and RunReport
+        counters are identical to an uninterrupted run of the same
+        configuration (tests/test_fault_tolerance.py pins this).  For
+        ``via="sharded"`` the ensemble is resharded onto ``mesh`` (or the
+        best mesh for the CURRENT device count — the elastic-restart
+        path: a checkpoint from an 8-shard run restarts on 4 surviving
+        devices unchanged).  The checkpoint's config fingerprint must
+        match this driver's (``n_cycles`` exempt); a mismatch raises
+        :class:`~repro.ckpt.CheckpointError` instead of silently
+        diverging.
+        """
+        if self.ckpt is None:
+            raise ValueError("resume() needs a driver constructed with "
+                             "ckpt_dir")
+        if via not in ("run", "fused", "sharded"):
+            raise ValueError(f"via must be run|fused|sharded, got {via!r}")
+        tree, step_no, extra = self._load_ckpt(step=step)
+        meta = (extra or {}).get("repex")
+        if not meta:
+            raise CheckpointError(
+                f"checkpoint step {step_no} carries no driver state "
+                f"('repex' extra missing) — it was written by "
+                f"ckpt.maybe_save directly, not the driver; use restore()")
+        saved_cfg = meta.get("config", {})
+        cur_cfg = self._cfg_fingerprint()
+        if saved_cfg != cur_cfg:
+            diff = sorted(k for k in set(saved_cfg) | set(cur_cfg)
+                          if saved_cfg.get(k) != cur_cfg.get(k))
+            raise CheckpointError(
+                f"checkpoint config does not match this driver "
+                f"(differing fields: {diff}) — resume with the original "
+                f"configuration")
+
+        self.history = [
+            dict(h, assignment=np.asarray(h["assignment"], np.int32))
+            if h.get("assignment") is not None else dict(h)
+            for h in meta.get("history", [])]
+        self.acceptance = {k: [float(v[0]), float(v[1])]
+                           for k, v in meta.get("acceptance", {}).items()}
+        if self.telemetry is not None and meta.get("telemetry") is not None:
+            self.telemetry.load_state_dict(meta["telemetry"])
+
+        ens = Ensemble(**tree["ensemble"])
+        self._resume_carry = (tree["backup"], tree["fail_key"])
+        total = n_cycles or self.cfg.n_cycles
+        remaining = total - int(jax.device_get(ens.cycle))
+        if remaining <= 0:
+            self._resume_carry = None
+            self.last_report = build_report(
+                self, via, None if via == "run" else chunk_cycles)
+            return ens
+        if via == "run":
+            return self.run(ens, n_cycles=remaining, verbose=verbose)
+        if via == "sharded":
+            return self.run_sharded(ens, mesh=mesh, n_cycles=remaining,
+                                    chunk_cycles=chunk_cycles,
+                                    verbose=verbose)
+        return self.run_fused(ens, n_cycles=remaining,
+                              chunk_cycles=chunk_cycles, verbose=verbose)

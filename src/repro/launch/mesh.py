@@ -46,6 +46,25 @@ def make_replica_mesh(n_shards: int = 0):
     return jax.make_mesh((n_shards,), ("replica",))
 
 
+def best_replica_shards(n_replicas: int,
+                        max_devices: int = 0) -> int:
+    """Largest usable shard count for ``n_replicas`` on the CURRENT
+    device set: the biggest divisor of the replica count that does not
+    exceed the visible (or ``max_devices``-capped) device count.
+
+    This is the elastic-restart resource map (docs/FAULT_TOLERANCE.md):
+    a run checkpointed on one mesh calls this on whatever devices
+    SURVIVE and reshards onto the answer — losing (or gaining) devices
+    changes the mesh shape, never the trajectory."""
+    n = jax.device_count()
+    if max_devices:
+        n = min(n, max_devices)
+    n = max(min(n, n_replicas), 1)
+    while n_replicas % n:
+        n -= 1
+    return n
+
+
 # --- ladder-neighbor permutation tables (halo exchange) --------------------
 #
 # The replica mesh is a RING in ladder order: shard s holds the contiguous

@@ -48,6 +48,19 @@ def main():
     ap.add_argument("--atoms", type=int, default=22)
     ap.add_argument("--failure-rate", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", default=None, metavar="CKPT_DIR",
+                    help="continue a killed run from its newest INTACT "
+                         "checkpoint in CKPT_DIR (bitwise-identical "
+                         "trajectory; --cycles is the TOTAL cycle count "
+                         "of the stitched run; pass the original run's "
+                         "flags — a config mismatch is refused).  "
+                         "--report-out reflects the stitched run.  "
+                         "docs/FAULT_TOLERANCE.md")
+    ap.add_argument("--relaunch-budget", type=int, default=0,
+                    help="escalation budget B: relaunch a replica at most "
+                         "B consecutive times, then reinit from the peer "
+                         "rung, then continue degraded (0 = unlimited "
+                         "relaunches)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--chunk", type=int, default=0,
                     help="fuse K cycles per dispatch (run_fused)")
@@ -72,6 +85,7 @@ def main():
         exchange_scheme=args.scheme,
         execution_mode=args.mode,
         seed=args.seed,
+        relaunch_budget=args.relaunch_budget,
     )
     if args.engine == "lj":
         engine = LJEngine()
@@ -86,23 +100,35 @@ def main():
     if args.report_out:
         from repro.obs import Telemetry
         telemetry = Telemetry(phase_probe_every=args.phase_probe_every)
+    ckpt_dir = args.resume or args.ckpt_dir
     driver = REMDDriver(engine, cfg, slots=args.slots,
-                        ckpt_dir=args.ckpt_dir,
-                        ckpt_every=1 if args.ckpt_dir else 0,
+                        ckpt_dir=ckpt_dir,
+                        ckpt_every=1 if ckpt_dir else 0,
                         failure_rate=args.failure_rate,
                         telemetry=telemetry)
     print(f"replicas={driver.grid.n_ctrl} execution={driver.execution} "
           f"pattern={cfg.pattern} scheme={cfg.exchange_scheme}")
-    ens = driver.init()
-    if args.shards:
+    if args.resume:
+        via = "sharded" if args.shards else ("fused" if args.chunk
+                                             else "run")
+        mesh = None
+        if args.shards:
+            from repro.launch.mesh import make_replica_mesh
+            mesh = make_replica_mesh(args.shards)
+        ens = driver.resume(via=via, n_cycles=args.cycles,
+                            chunk_cycles=args.chunk or 16, mesh=mesh,
+                            verbose=True)
+    elif args.shards:
         from repro.launch.mesh import make_replica_mesh
-        ens = driver.run_sharded(ens, mesh=make_replica_mesh(args.shards),
+        ens = driver.run_sharded(driver.init(),
+                                 mesh=make_replica_mesh(args.shards),
                                  chunk_cycles=args.chunk or 16,
                                  verbose=True)
     elif args.chunk:
-        ens = driver.run_fused(ens, chunk_cycles=args.chunk, verbose=True)
+        ens = driver.run_fused(driver.init(), chunk_cycles=args.chunk,
+                               verbose=True)
     else:
-        ens = driver.run(ens, verbose=True)
+        ens = driver.run(driver.init(), verbose=True)
     print("\nmultiset ok:", control_multiset_ok(ens))
     print("acceptance:", {k: f"{v*100:.1f}%"
                           for k, v in driver.acceptance_ratios().items()})

@@ -76,6 +76,29 @@ def _any_nonfinite(state) -> jax.Array:
     return functools.reduce(jnp.logical_or, jax.tree.leaves(bad))
 
 
+def _kinetic_energy(vel: jax.Array, masses: jax.Array) -> jax.Array:
+    """(R, N, 3) velocities -> (R,) kinetic energy.
+
+    The energy-divergence detector keys on KINETIC energy: an integrator
+    blow-up shows up as a velocity explosion (a temperature spike) one or
+    more steps BEFORE positions overflow to inf/NaN, so a threshold here
+    catches diverging replicas while their state is still finite — the
+    regime the bare non-finite scan is blind to."""
+    return 0.5 * jnp.sum(masses[None, :, None] * vel * vel, axis=(1, 2))
+
+
+def _bond_overstretch(pos: jax.Array, bonds: jax.Array, r0: jax.Array,
+                      max_stretch: float) -> jax.Array:
+    """(R, N, 3) positions -> (R,) bool: any bond stretched past
+    ``max_stretch`` x its equilibrium length (bond blow-up — SHAKE-style
+    sanity check; a silently snapped chain is a failed replica even when
+    every coordinate is finite)."""
+    ri = pos[:, bonds[:, 0]]                    # (R, B, 3)
+    rj = pos[:, bonds[:, 1]]
+    r = jnp.sqrt(jnp.sum((ri - rj) ** 2, axis=-1))      # (R, B)
+    return jnp.any(r > max_stretch * r0[None, :], axis=1)
+
+
 class MDEngine:
     def __init__(self, system: Optional[MolecularSystem] = None,
                  dt: float = 5e-4, gamma: float = 5.0,
@@ -85,7 +108,9 @@ class MDEngine:
                  nonbonded: str = "dense", cutoff: float = 9.0,
                  skin: float = 1.5, k_max: Optional[int] = None,
                  nlist_build: Optional[str] = None,
-                 cell_capacity: Optional[int] = None):
+                 cell_capacity: Optional[int] = None,
+                 max_energy: Optional[float] = None,
+                 max_bond_stretch: Optional[float] = None):
         """``force_path``: "pallas" (analytic, default), "batched"
         (autodiff of the replica-major potential) or "vmap" (per-replica
         oracle).  ``batched=False`` implies "vmap" — requesting any
@@ -112,6 +137,15 @@ class MDEngine:
         into the same ``nb_overflow`` accounting — an explicit cap
         bounds memory, and a too-tight one is visible in the driver
         stats, never silent.
+
+        ``max_energy`` / ``max_bond_stretch``: opt-in failure-detection
+        thresholds broadening ``is_failed`` beyond the non-finite scan
+        (docs/FAULT_TOLERANCE.md).  ``max_energy`` flags a replica whose
+        KINETIC energy exceeds it (integrator blow-up = temperature
+        spike before NaN); ``max_bond_stretch`` flags any bond stretched
+        past that multiple of its equilibrium length (bond blow-up).
+        ``None`` (default) keeps the detector off — bitwise-identical to
+        the legacy NaN-only behavior.
         """
         self.system = system or chain_molecule()
         self.dt = dt
@@ -143,6 +177,13 @@ class MDEngine:
                 f"cannot run force_path={force_path!r}")
         self.force_path = force_path
         self.nonbonded = nonbonded
+        self.max_energy = None if max_energy is None else float(max_energy)
+        self.max_bond_stretch = (None if max_bond_stretch is None
+                                 else float(max_bond_stretch))
+        self.failure_detectors = (
+            ("nonfinite",)
+            + (("energy",) if self.max_energy is not None else ())
+            + (("bond",) if self.max_bond_stretch is not None else ()))
         self._use_kernel = (default_use_kernel() if use_force_kernels is None
                             else use_force_kernels)
         self._pack = (chain_ops.build_pack(self.system)
@@ -393,7 +434,17 @@ class MDEngine:
         return xops.exchange_matrix(feats, ctrl_grid)
 
     def is_failed(self, state):
-        return _any_nonfinite(state)
+        bad = _any_nonfinite(state)
+        # threshold detectors compile only when declared: the default
+        # engine's compiled program (and its HLO op census) is unchanged
+        if self.max_energy is not None:
+            ke = _kinetic_energy(state["vel"], self.system.masses)
+            bad = bad | (ke > self.max_energy)
+        if self.max_bond_stretch is not None:
+            bad = bad | _bond_overstretch(state["pos"], self.system.bonds,
+                                          self.system.bond_r0,
+                                          self.max_bond_stretch)
+        return bad
 
 
 class _TOnlyFeatureAPI:
@@ -521,7 +572,8 @@ class LJEngine(_TOnlyFeatureAPI):
 
     def __init__(self, n_particles: int = 64, box: float = 12.0,
                  dt: float = 2e-3, gamma: float = 2.0,
-                 use_pallas: bool = False, batched: bool = True):
+                 use_pallas: bool = False, batched: bool = True,
+                 max_energy: Optional[float] = None):
         self.n = n_particles
         self.box = box
         self.dt = dt
@@ -531,6 +583,11 @@ class LJEngine(_TOnlyFeatureAPI):
         self.masses = jnp.full(n_particles, 39.9)    # argon
         self.sigma = 3.4
         self.eps = 0.238
+        # opt-in kinetic-energy divergence threshold (None = NaN-only)
+        self.max_energy = None if max_energy is None else float(max_energy)
+        self.failure_detectors = (
+            ("nonfinite",)
+            + (("energy",) if self.max_energy is not None else ()))
 
     def _potential(self, pos):
         """Single-replica (N, 3) -> scalar (reference path)."""
@@ -624,4 +681,8 @@ class LJEngine(_TOnlyFeatureAPI):
         return {"u": self._potential_stack(state["pos"])}
 
     def is_failed(self, state):
-        return _any_nonfinite(state)
+        bad = _any_nonfinite(state)
+        if self.max_energy is not None:
+            ke = _kinetic_energy(state["vel"], self.masses)
+            bad = bad | (ke > self.max_energy)
+        return bad

@@ -20,7 +20,9 @@ Schema (``docs/OBSERVABILITY.md`` is the narrative version):
   exchange    {attempted, accepted, rate, per_dim{...},
                pair_attempt, pair_accept,       (D, 2, W) nested lists or
                occupancy, round_trips}          null (matrix scheme / off)
-  failures    {total}
+  failures    {total, relaunched, reinit_peer, degraded}
+                                          escalation-ladder rollups
+                                          (docs/FAULT_TOLERANCE.md)
   neighbor    {nb_overflow, nb_rebuilds}        end-of-run cumulative max
   wire        {per_chunk{K: {op: {count, bytes}}}, totals{op: ...}}
   meta        {backend, n_devices}
@@ -37,7 +39,9 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
-REPORT_VERSION = 1
+# v2: failures section gained the escalation-ladder counters
+# (relaunched / reinit_peer / degraded)
+REPORT_VERSION = 2
 
 # top-level keys every report must carry (CI schema check)
 _REQUIRED = ("version", "path", "engine", "pattern", "scheme",
@@ -123,6 +127,9 @@ def validate_report(d: Dict[str, Any]) -> Dict[str, Any]:
         for k in ("nb_overflow", "nb_rebuilds"):
             if k not in d["neighbor"]:
                 problems.append(f"neighbor missing {k!r}")
+        for k in ("total", "relaunched", "reinit_peer", "degraded"):
+            if k not in d["failures"]:
+                problems.append(f"failures missing {k!r}")
     if problems:
         raise ValueError("invalid RunReport: " + "; ".join(problems))
     return d
@@ -215,7 +222,12 @@ def build_report(driver, path: str,
     }
 
     # -- failures / neighbor-list rollups --------------------------------
-    failures = {"total": int(sum(h["failed"] for h in hist))}
+    failures = {
+        "total": int(sum(h["failed"] for h in hist)),
+        "relaunched": int(sum(h.get("esc_relaunch", 0) for h in hist)),
+        "reinit_peer": int(sum(h.get("esc_reinit", 0) for h in hist)),
+        "degraded": int(sum(h.get("esc_dead", 0) for h in hist)),
+    }
     # nb counters are cumulative per run — the rollup is the running max
     neighbor = {
         "nb_overflow": float(max((h["nb_overflow"] for h in hist),

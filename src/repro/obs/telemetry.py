@@ -221,6 +221,44 @@ class Telemetry:
         if entry is not None:
             entry["invocations"] += 1
 
+    # -- checkpoint serialization (bitwise-resume contract) ---------------
+
+    _ARRAY_FIELDS = ("pair_attempt", "pair_accept", "occupancy",
+                     "rt_phase", "round_trips")
+
+    def state_dict(self) -> Dict[str, Any]:
+        """JSON-serializable snapshot of every accumulator (NOT the
+        config flags — those belong to the relaunching driver).  Rides
+        the driver checkpoint so a resumed run's RunReport counters equal
+        an uninterrupted run's (docs/FAULT_TOLERANCE.md)."""
+        out: Dict[str, Any] = {}
+        for f in self._ARRAY_FIELDS:
+            a = getattr(self, f)
+            out[f] = (None if a is None
+                      else {"dtype": str(a.dtype), "data": a.tolist()})
+        out["phase_samples"] = list(self.phase_samples)
+        out["wire"] = {str(k): v for k, v in self.wire.items()}
+        out["n_cycles_seen"] = self.n_cycles_seen
+        out["t_cycle_total"] = self.t_cycle_total
+        out["t_data_total"] = self.t_data_total
+        out["t_prep_total"] = self.t_prep_total
+        out["chunks_seen"] = self._chunks_seen
+        return out
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        """Inverse of :meth:`state_dict` (config flags untouched)."""
+        for f in self._ARRAY_FIELDS:
+            v = d.get(f)
+            setattr(self, f, None if v is None
+                    else np.asarray(v["data"], dtype=np.dtype(v["dtype"])))
+        self.phase_samples = list(d.get("phase_samples", []))
+        self.wire = {int(k): v for k, v in d.get("wire", {}).items()}
+        self.n_cycles_seen = int(d.get("n_cycles_seen", 0))
+        self.t_cycle_total = float(d.get("t_cycle_total", 0.0))
+        self.t_data_total = float(d.get("t_data_total", 0.0))
+        self.t_prep_total = float(d.get("t_prep_total", 0.0))
+        self._chunks_seen = int(d.get("chunks_seen", 0))
+
     # -- summaries --------------------------------------------------------
 
     def phase_means(self) -> Dict[str, float]:
@@ -318,7 +356,8 @@ def make_phase_probes(driver) -> Dict[str, Any]:
                                   cfg.exchange_scheme, ready=ens.alive)
 
     def probe_detect_recover(ens):
-        return F.detect_recover(engine, ens, policy, ens.state)
+        return F.detect_recover(engine, ens, policy, ens.state,
+                                relaunch_budget=cfg.relaunch_budget)
 
     return {
         "propagate": jax.jit(probe_propagate),

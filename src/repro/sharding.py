@@ -229,7 +229,7 @@ def ensemble_specs(ens):
     return type(ens)(
         state=jax.tree.map(lambda _: P("replica"), ens.state),
         assignment=P(), rng=P(), cycle=P(), debt=P(), speed=P(),
-        alive=P(), failures=P())
+        alive=P(), failures=P(), relaunches=P())
 
 
 def ensemble_shardings(mesh: Mesh, ens):

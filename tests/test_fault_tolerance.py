@@ -1,0 +1,476 @@
+"""The hardened fault-tolerance pipeline (docs/FAULT_TOLERANCE.md).
+
+Four layers, each pinned here:
+
+  1. verified checkpoints — CRC32 per array, walk-back to the newest
+     INTACT step on corruption/truncation, descriptive tree-mismatch
+     errors, validated ``latest`` pointer;
+  2. exact resume — a killed run restarted from its checkpoint produces
+     a BITWISE-identical discrete trajectory and RunReport counters
+     equal to an uninterrupted run (across run paths x patterns x
+     schemes, with failure injection live);
+  3. failure escalation — relaunch -> reinit-from-peer-rung ->
+     continue-degraded, keyed on the per-replica consecutive-failure
+     streak and the ``relaunch_budget``; threshold detectors beyond the
+     NaN scan;
+  4. elastic restart — covered on a real multi-device mesh in
+     tests/test_sharded.py (``test_elastic_resume_shrunken_mesh``).
+"""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (CheckpointCorruptError, CheckpointError,
+                        CheckpointManager, load_checkpoint, save_checkpoint)
+from repro.config import RepExConfig
+from repro.core import REMDDriver
+from repro.md import HarmonicEngine, LJEngine, MDEngine
+from repro.obs import Telemetry, validate_report
+
+
+# -- layer 1: verified checkpoints ----------------------------------------
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {"a": jax.random.normal(k, (4, 3)),
+            "b": jnp.arange(5, dtype=jnp.int32)}
+
+
+def _arr_files(step_dir):
+    return sorted(f for f in os.listdir(step_dir) if f.endswith(".npy"))
+
+
+def test_crc_corruption_walks_back(tmp_path):
+    """Bit-rot in the newest step is DETECTED by checksum and the loader
+    falls back to the previous intact step (the acceptance criterion)."""
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1))
+    save_checkpoint(d, 2, _tree(2))
+    # flip payload bytes in step-2's first array, keeping a valid .npy
+    target = os.path.join(d, "step-00000002")
+    fname = os.path.join(target, _arr_files(target)[0])
+    arr = np.load(fname)
+    np.save(fname, arr + 1.0)
+    tree, step, _ = load_checkpoint(d, _tree())
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(tree["b"]),
+                                  np.asarray(_tree(1)["b"]))
+
+
+def test_truncated_array_walks_back(tmp_path):
+    """A crash mid-write (torn/truncated payload) is treated exactly like
+    bit-rot: walk back to the previous step."""
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1))
+    save_checkpoint(d, 2, _tree(2))
+    target = os.path.join(d, "step-00000002")
+    fname = os.path.join(target, _arr_files(target)[0])
+    with open(fname, "r+b") as f:
+        f.truncate(os.path.getsize(fname) // 2)
+    _, step, _ = load_checkpoint(d, _tree())
+    assert step == 1
+
+
+def test_unreadable_manifest_walks_back(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1))
+    save_checkpoint(d, 2, _tree(2))
+    with open(os.path.join(d, "step-00000002", "manifest.json"), "w") as f:
+        f.write("{not json")
+    _, step, _ = load_checkpoint(d, _tree())
+    assert step == 1
+
+
+def test_stale_latest_pointer_falls_back(tmp_path):
+    """A ``latest`` pointer at a retention-deleted dir is skipped, not
+    fatal — both for load_checkpoint and CheckpointManager.latest_step
+    (which used to crash with FileNotFoundError/ValueError)."""
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1))
+    save_checkpoint(d, 2, _tree(2))
+    shutil.rmtree(os.path.join(d, "step-00000002"))   # latest now dangles
+    _, step, _ = load_checkpoint(d, _tree())
+    assert step == 1
+    mgr = CheckpointManager(d)
+    assert mgr.latest_step() == 1
+    # garbage pointer content: same fallback
+    with open(os.path.join(d, "latest"), "w") as f:
+        f.write("not-a-step-dir")
+    assert mgr.latest_step() == 1
+    _, step, _ = load_checkpoint(d, _tree())
+    assert step == 1
+
+
+def test_latest_step_empty_dir(tmp_path):
+    assert CheckpointManager(str(tmp_path)).latest_step() is None
+
+
+def test_all_corrupt_raises_with_reasons(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1))
+    save_checkpoint(d, 2, _tree(2))
+    for step_dir in ("step-00000001", "step-00000002"):
+        with open(os.path.join(d, step_dir, "manifest.json"), "w") as f:
+            f.write("garbage")
+    with pytest.raises(CheckpointCorruptError, match="no intact") as ei:
+        load_checkpoint(d, _tree())
+    assert len(ei.value.reasons) == 2
+
+
+def test_explicit_step_does_not_fall_back(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1))
+    save_checkpoint(d, 2, _tree(2))
+    target = os.path.join(d, "step-00000002")
+    with open(os.path.join(target, "manifest.json"), "w") as f:
+        f.write("garbage")
+    with pytest.raises(CheckpointCorruptError):
+        load_checkpoint(d, _tree(), step=2)
+
+
+def test_tree_mismatch_raises_descriptive_error(tmp_path):
+    """A template/manifest key mismatch (restart with a different config)
+    names the missing and unexpected keys instead of a bare KeyError —
+    and does NOT walk back (the mismatch is structural)."""
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"a": jnp.zeros(3), "b": jnp.ones(2)})
+    with pytest.raises(CheckpointError, match="missing") as ei:
+        load_checkpoint(d, {"a": jnp.zeros(3), "c": jnp.ones(2)})
+    msg = str(ei.value)
+    assert "'c'" in msg and "'b'" in msg
+    assert not isinstance(ei.value, CheckpointCorruptError)
+
+
+def test_missing_directory_raises(tmp_path):
+    with pytest.raises(CheckpointError, match="no checkpoint"):
+        load_checkpoint(str(tmp_path / "nope"), _tree())
+
+
+def test_legacy_v1_manifest_still_loads(tmp_path):
+    """A pre-checksum (version-1) manifest restores — verification is
+    simply skipped for it, keeping old checkpoints restartable."""
+    d = str(tmp_path)
+    path = save_checkpoint(d, 3, _tree(3))
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    del manifest["manifest_version"]
+    for meta in manifest["arrays"].values():
+        del meta["crc32"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    _, step, _ = load_checkpoint(d, _tree())
+    assert step == 3
+
+
+# -- layers 2+3: drivers, resume, escalation ------------------------------
+
+
+def _cfg(pattern="synchronous", scheme="neighbor", n_cycles=10,
+         budget=0, n_replicas=8):
+    return RepExConfig(
+        dimensions=(("temperature", n_replicas),),
+        md_steps_per_cycle=4, n_cycles=n_cycles, pattern=pattern,
+        exchange_scheme=scheme, relaunch_budget=budget)
+
+
+def _harmonic_driver(cfg, ckpt_dir=None, ckpt_every=0, failure_rate=0.3,
+                     telemetry=True, engine=None):
+    return REMDDriver(engine or HarmonicEngine(), cfg,
+                      ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                      failure_rate=failure_rate,
+                      telemetry=Telemetry() if telemetry else None)
+
+
+def _run_via(driver, ens, via, n_cycles=None, chunk=3):
+    if via == "run":
+        return driver.run(ens, n_cycles=n_cycles)
+    return driver.run_fused(ens, n_cycles=n_cycles, chunk_cycles=chunk)
+
+
+def _assert_stitched_equals_uninterrupted(d_ref, d_res, e_ref, e_res):
+    """The kill-and-resume acceptance criterion: discrete trajectory,
+    acceptance bookkeeping and RunReport counters all equal."""
+    np.testing.assert_array_equal(np.asarray(e_ref.assignment),
+                                  np.asarray(e_res.assignment))
+    np.testing.assert_array_equal(np.asarray(e_ref.alive),
+                                  np.asarray(e_res.alive))
+    assert int(e_ref.cycle) == int(e_res.cycle)
+    assert int(e_ref.failures) == int(e_res.failures)
+    np.testing.assert_array_equal(np.asarray(e_ref.relaunches),
+                                  np.asarray(e_res.relaunches))
+    assert d_ref.acceptance == d_res.acceptance
+    assert len(d_ref.history) == len(d_res.history)
+    for h_r, h_s in zip(d_ref.history, d_res.history):
+        for key in ("cycle", "dim", "accept", "attempt", "failed",
+                    "esc_relaunch", "esc_reinit", "esc_dead"):
+            assert h_r[key] == h_s[key], key
+        np.testing.assert_array_equal(np.asarray(h_r["assignment"]),
+                                      np.asarray(h_s["assignment"]))
+    rep_r = d_ref.last_report.to_dict()
+    rep_s = d_res.last_report.to_dict()
+    for k in ("attempted", "accepted", "rate", "per_dim", "pair_attempt",
+              "pair_accept", "occupancy", "round_trips"):
+        assert rep_r["exchange"][k] == rep_s["exchange"][k], k
+    assert rep_r["failures"] == rep_s["failures"]
+    assert rep_r["cycles"] == rep_s["cycles"]
+    validate_report(rep_s)
+
+
+@pytest.mark.parametrize("via,pattern,scheme", [
+    ("fused", "synchronous", "neighbor"),
+    ("fused", "asynchronous", "neighbor"),
+    ("fused", "synchronous", "matrix"),
+    ("run", "synchronous", "neighbor"),
+], ids=["fused-sync-neighbor", "fused-async-neighbor",
+        "fused-sync-matrix", "run-sync-neighbor"])
+def test_kill_and_resume_bitwise(tmp_path, via, pattern, scheme):
+    """A run killed mid-way and resumed from its checkpoint stitches to a
+    bitwise-identical discrete trajectory + equal report counters, with
+    failure injection live the whole time."""
+    cfg = _cfg(pattern=pattern, scheme=scheme, n_cycles=10)
+    ref = _harmonic_driver(cfg)
+    e_ref = _run_via(ref, ref.init(), via)
+
+    every = 5 if via == "run" else 1      # run() saves on cyc % every
+    a = _harmonic_driver(cfg, ckpt_dir=str(tmp_path), ckpt_every=every)
+    _run_via(a, a.init(), via, n_cycles=6)          # ... kill here
+
+    b = _harmonic_driver(cfg, ckpt_dir=str(tmp_path), ckpt_every=every)
+    e_res = b.resume(via=via, chunk_cycles=3)
+    assert len(b.history) == 10
+    _assert_stitched_equals_uninterrupted(ref, b, e_ref, e_res)
+
+
+def test_resume_across_chunk_size_change(tmp_path):
+    """Resume with a DIFFERENT chunk size: the chunk-size invariance of
+    the fused scan extends through the kill/resume boundary."""
+    cfg = _cfg(n_cycles=9)
+    ref = _harmonic_driver(cfg)
+    e_ref = ref.run_fused(ref.init(), chunk_cycles=3)
+    a = _harmonic_driver(cfg, ckpt_dir=str(tmp_path), ckpt_every=1)
+    a.run_fused(a.init(), n_cycles=4, chunk_cycles=2)
+    b = _harmonic_driver(cfg, ckpt_dir=str(tmp_path), ckpt_every=1)
+    e_res = b.resume(via="fused", chunk_cycles=5)
+    _assert_stitched_equals_uninterrupted(ref, b, e_ref, e_res)
+
+
+def test_resume_from_corrupted_newest_checkpoint(tmp_path):
+    """Corrupt the NEWEST checkpoint of a killed run: resume detects the
+    CRC mismatch, walks back one step, recomputes the lost cycles and
+    still stitches to the uninterrupted trajectory."""
+    cfg = _cfg(n_cycles=10)
+    ref = _harmonic_driver(cfg)
+    e_ref = ref.run_fused(ref.init(), chunk_cycles=2)
+
+    a = _harmonic_driver(cfg, ckpt_dir=str(tmp_path), ckpt_every=1)
+    a.run_fused(a.init(), n_cycles=6, chunk_cycles=2)   # saves 1, 3, 5
+    newest = os.path.join(str(tmp_path), "step-00000005")
+    fname = os.path.join(newest, _arr_files(newest)[0])
+    arr = np.load(fname)
+    np.save(fname, arr + 1.0)
+
+    b = _harmonic_driver(cfg, ckpt_dir=str(tmp_path), ckpt_every=1)
+    e_res = b.resume(via="fused", chunk_cycles=2)       # falls back to 3
+    _assert_stitched_equals_uninterrupted(ref, b, e_ref, e_res)
+
+
+def test_resume_refuses_config_mismatch(tmp_path):
+    a = _harmonic_driver(_cfg(), ckpt_dir=str(tmp_path), ckpt_every=1)
+    a.run_fused(a.init(), n_cycles=4, chunk_cycles=2)
+    wrong = RepExConfig(dimensions=(("temperature", 8),),
+                        md_steps_per_cycle=7, n_cycles=10)
+    b = _harmonic_driver(wrong, ckpt_dir=str(tmp_path), ckpt_every=1)
+    with pytest.raises(CheckpointError, match="md_steps_per_cycle"):
+        b.resume(via="fused")
+
+
+def test_resume_already_complete(tmp_path):
+    a = _harmonic_driver(_cfg(n_cycles=4), ckpt_dir=str(tmp_path),
+                         ckpt_every=1)
+    a.run_fused(a.init(), chunk_cycles=2)
+    b = _harmonic_driver(_cfg(n_cycles=4), ckpt_dir=str(tmp_path),
+                         ckpt_every=1)
+    ens = b.resume(via="fused")
+    assert int(ens.cycle) == 4
+    assert len(b.history) == 4
+    validate_report(b.last_report.to_dict())
+
+
+def test_restore_stages_carry_for_bitwise_continuation(tmp_path):
+    """The legacy restore() path also continues bit-exactly: the loaded
+    backup/fail_key carry is staged for the next run call."""
+    cfg = _cfg(n_cycles=8)
+    ref = _harmonic_driver(cfg, telemetry=False)
+    e_ref = ref.run_fused(ref.init(), chunk_cycles=2)
+    a = _harmonic_driver(cfg, ckpt_dir=str(tmp_path), ckpt_every=1,
+                         telemetry=False)
+    a.run_fused(a.init(), n_cycles=4, chunk_cycles=2)
+    b = _harmonic_driver(cfg, ckpt_dir=str(tmp_path), ckpt_every=1,
+                         telemetry=False)
+    ens = b.restore(b.init())
+    assert int(ens.cycle) == 4
+    e_res = b.run_fused(ens, n_cycles=4, chunk_cycles=2)
+    np.testing.assert_array_equal(np.asarray(e_ref.assignment),
+                                  np.asarray(e_res.assignment))
+    assert int(e_ref.failures) == int(e_res.failures)
+
+
+# -- layer 3: escalation ladder -------------------------------------------
+
+
+class _StuckReplicaEngine(HarmonicEngine):
+    """Replica 0 fails EVERY cycle (models a persistently-broken lane —
+    bad device memory, a poisoned state no rewind can fix)."""
+
+    def is_failed(self, state):
+        base = super().is_failed(state)
+        r = base.shape[0]
+        return base | (jnp.arange(r) == 0)
+
+
+def test_escalation_ladder_relaunch_reinit_degrade():
+    """budget B=2: tier 1 (relaunch) twice, tier 2 (peer reinit) twice,
+    then tier 3 (continue degraded) — and once dead, the replica stops
+    counting as failed."""
+    cfg = _cfg(n_cycles=8, budget=2)
+    d = _harmonic_driver(cfg, failure_rate=0.0,
+                         engine=_StuckReplicaEngine())
+    ens = d.run_fused(d.init(), chunk_cycles=4)
+    assert [h["failed"] for h in d.history] == [1, 1, 1, 1, 1, 0, 0, 0]
+    assert sum(h["esc_relaunch"] for h in d.history) == 2
+    assert sum(h["esc_reinit"] for h in d.history) == 2
+    assert sum(h["esc_dead"] for h in d.history) == 1
+    alive = np.asarray(ens.alive)
+    assert not alive[0] and alive[1:].all()
+    assert int(ens.failures) == 5
+    rep = d.last_report.to_dict()
+    assert rep["failures"] == {"total": 5, "relaunched": 2,
+                               "reinit_peer": 2, "degraded": 1}
+    validate_report(rep)
+
+
+def test_escalation_budget_zero_is_unlimited_relaunch():
+    """The default budget keeps the legacy semantics: relaunch forever,
+    never escalate, never degrade."""
+    cfg = _cfg(n_cycles=8, budget=0)
+    d = _harmonic_driver(cfg, failure_rate=0.0,
+                         engine=_StuckReplicaEngine())
+    ens = d.run_fused(d.init(), chunk_cycles=4)
+    assert sum(h["failed"] for h in d.history) == 8
+    assert sum(h["esc_relaunch"] for h in d.history) == 8
+    assert sum(h["esc_reinit"] for h in d.history) == 0
+    assert sum(h["esc_dead"] for h in d.history) == 0
+    assert np.asarray(ens.alive).all()
+
+
+def test_escalation_run_matches_fused():
+    """run() routes through the same jitted detect_recover as the fused
+    scan: the escalation trajectory is identical."""
+    cfg = _cfg(n_cycles=8, budget=2)
+    d_f = _harmonic_driver(cfg, failure_rate=0.0,
+                           engine=_StuckReplicaEngine(), telemetry=False)
+    d_r = _harmonic_driver(cfg, failure_rate=0.0,
+                           engine=_StuckReplicaEngine(), telemetry=False)
+    e_f = d_f.run_fused(d_f.init(), chunk_cycles=4)
+    e_r = d_r.run(d_r.init())
+    np.testing.assert_array_equal(np.asarray(e_f.alive),
+                                  np.asarray(e_r.alive))
+    np.testing.assert_array_equal(np.asarray(e_f.relaunches),
+                                  np.asarray(e_r.relaunches))
+    for h_f, h_r in zip(d_f.history, d_r.history):
+        for key in ("failed", "esc_relaunch", "esc_reinit", "esc_dead"):
+            assert h_f[key] == h_r[key], key
+
+
+def test_peer_reinit_copies_next_rung_backup():
+    """Tier 2 really does re-seed from the NEXT rung's backup: with the
+    backup frozen at the initial state (replica 0 fails every cycle),
+    the first reinit lands replica 0 exactly on replica 1's initial row."""
+    cfg = _cfg(n_cycles=3, budget=1)
+    d = _harmonic_driver(cfg, failure_rate=0.0,
+                         engine=_StuckReplicaEngine(), telemetry=False)
+    ens0 = d.init()
+    # cycle 1: relaunch (streak 1); cycle 2: reinit (streak 2 > B=1)
+    ens = d.run_fused(ens0, n_cycles=2, chunk_cycles=2)
+    np.testing.assert_array_equal(np.asarray(ens.state["x"][0]),
+                                  np.asarray(ens0.state["x"][1]))
+
+
+def test_streak_resets_on_clean_cycle():
+    """Transient (injected) failures never escalate under a budget: the
+    consecutive-failure streak resets on every clean cycle."""
+    cfg = _cfg(n_cycles=10, budget=3)
+    d = _harmonic_driver(cfg, failure_rate=0.3, telemetry=False)
+    ens = d.run_fused(d.init(), chunk_cycles=5)
+    assert sum(h["failed"] for h in d.history) > 0
+    assert np.asarray(ens.alive).all()
+    assert sum(h["esc_dead"] for h in d.history) == 0
+
+
+# -- layer 3: threshold detectors -----------------------------------------
+
+
+def test_md_kinetic_energy_detector():
+    eng_off = MDEngine()
+    eng_on = MDEngine(max_energy=1e5)   # baseline thermal KE is ~1e4
+    state = eng_on.init_state(jax.random.key(0), 4)
+    hot = dict(state, vel=state["vel"].at[2].set(1e3))
+    assert not np.asarray(eng_off.is_failed(hot)).any()
+    flagged = np.asarray(eng_on.is_failed(hot))
+    assert flagged[2] and not flagged[[0, 1, 3]].any()
+
+
+def test_md_bond_stretch_detector():
+    eng_off = MDEngine()
+    eng_on = MDEngine(max_bond_stretch=2.0)
+    state = eng_on.init_state(jax.random.key(0), 4)
+    torn = dict(state, pos=state["pos"].at[1].multiply(10.0))
+    assert not np.asarray(eng_off.is_failed(torn)).any()
+    flagged = np.asarray(eng_on.is_failed(torn))
+    assert flagged[1] and not flagged[[0, 2, 3]].any()
+
+
+def test_lj_kinetic_energy_detector():
+    eng = LJEngine(n_particles=8, max_energy=1e5)
+    state = eng.init_state(jax.random.key(0), 3)
+    hot = dict(state, vel=state["vel"].at[0].set(1e3))
+    flagged = np.asarray(eng.is_failed(hot))
+    assert flagged[0] and not flagged[1:].any()
+
+
+def test_nan_still_detected_with_thresholds():
+    eng = MDEngine(max_energy=1e5, max_bond_stretch=2.0)
+    state = eng.init_state(jax.random.key(0), 3)
+    nan = dict(state, pos=state["pos"].at[1, 0, 0].set(jnp.nan))
+    flagged = np.asarray(eng.is_failed(nan))
+    assert flagged[1] and not flagged[[0, 2]].any()
+
+
+def test_failure_detector_capabilities():
+    from repro.core.engine import engine_capabilities
+    assert engine_capabilities(MDEngine())["failure_detectors"] == \
+        ("nonfinite",)
+    caps = engine_capabilities(MDEngine(max_energy=1.0,
+                                        max_bond_stretch=2.0))
+    assert caps["failure_detectors"] == ("nonfinite", "energy", "bond")
+    assert engine_capabilities(
+        LJEngine(max_energy=5.0))["failure_detectors"] == \
+        ("nonfinite", "energy")
+
+
+def test_threshold_engine_in_driver_relaunches():
+    """End-to-end: a divergence-threshold engine inside the driver —
+    flagged replicas rewind exactly like NaN failures."""
+    cfg = RepExConfig(dimensions=(("temperature", 4),),
+                      md_steps_per_cycle=2, n_cycles=4)
+    d = REMDDriver(MDEngine(max_energy=1e-3), cfg)   # absurdly tight
+    ens = d.run_fused(d.init(), chunk_cycles=2)
+    assert sum(h["failed"] for h in d.history) > 0
+    assert np.asarray(ens.alive).all()               # relaunched, not dead

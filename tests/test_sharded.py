@@ -39,12 +39,13 @@ multidevice = pytest.mark.skipif(
 def _driver(engine=None, pattern="synchronous", scheme="neighbor",
             failure_rate=0.0, relaunch=True, n_replicas=8, n_cycles=6,
             md_steps=2, execution_mode="auto", slots=None,
-            dimensions=None, exchange_comm="halo"):
+            dimensions=None, exchange_comm="halo", relaunch_budget=0):
     cfg = RepExConfig(
         dimensions=dimensions or (("temperature", n_replicas),),
         md_steps_per_cycle=md_steps, n_cycles=n_cycles, pattern=pattern,
         exchange_scheme=scheme, relaunch_failed=relaunch,
-        execution_mode=execution_mode, exchange_comm=exchange_comm)
+        execution_mode=execution_mode, exchange_comm=exchange_comm,
+        relaunch_budget=relaunch_budget)
     return REMDDriver(engine or MDEngine(), cfg, slots=slots,
                       failure_rate=failure_rate)
 
@@ -356,3 +357,125 @@ def test_make_replica_mesh_validation():
         make_replica_mesh(N_DEVICES + 1)
     mesh = make_replica_mesh(1)
     assert mesh.shape == {"replica": 1}
+
+
+# -- fault tolerance under sharding (docs/FAULT_TOLERANCE.md) -------------
+
+
+def test_best_replica_shards_divides():
+    """The elastic-restart resource map: always a divisor of R, never
+    more than the visible (or capped) device count."""
+    from repro.launch.mesh import best_replica_shards
+    for r in (1, 5, 6, 8, 256):
+        s = best_replica_shards(r)
+        assert r % s == 0
+        assert 1 <= s <= max(1, min(N_DEVICES, r))
+    assert best_replica_shards(8, max_devices=1) == 1
+    assert best_replica_shards(8, max_devices=3) in (1, 2)
+
+
+@multidevice
+def test_sharded_auto_mesh_picks_divisor():
+    """run_sharded with no mesh reshards onto best_replica_shards — the
+    entry point elastic restart relies on."""
+    d = _driver(n_replicas=6, n_cycles=2)
+    ens = d.run_sharded(d.init(), chunk_cycles=2)
+    assert control_multiset_ok(ens)
+
+
+@multidevice
+def test_sharded_failure_recovery_matrix_scheme():
+    """Failure injection under the Gibbs (matrix) exchange scheme: the
+    shard-local detection + (B,)-row halo recovery composes with the
+    tiled cross-energy matrix exactly as with DEO sweeps."""
+    d_f, d_s, e_f, e_s = _run_pair(8, failure_rate=0.3, scheme="matrix",
+                                   n_cycles=6)
+    _assert_discrete_identical(d_f, d_s, e_f, e_s)
+    assert sum(h["failed"] for h in d_s.history) > 0
+
+
+@multidevice
+def test_sharded_failure_recovery_2d_ladder():
+    """Failure injection on the 2-D (T x umbrella) grid: rewinds land in
+    the right shard block for BOTH dimensions' sweeps."""
+    d_f, d_s, e_f, e_s = _run_pair(8, dimensions=_DIMS_2D, n_cycles=8,
+                                   chunk_cycles=4, failure_rate=0.3)
+    _assert_discrete_identical(d_f, d_s, e_f, e_s)
+    assert sum(h["failed"] for h in d_s.history) > 0
+    assert sorted(set(h["dim"] for h in d_s.history)) == [0, 1]
+
+
+@multidevice
+def test_sharded_escalation_budget_bitwise():
+    """A finite relaunch budget under sharding: the consecutive-failure
+    streaks, peer-rung reinit (one boundary state row crosses the halo
+    ring) and escalation counters all match the fused path bitwise."""
+    d_f, d_s, e_f, e_s = _run_pair(
+        8, engine_factory=HarmonicEngine, failure_rate=0.5,
+        relaunch_budget=1, n_cycles=8, chunk_cycles=4)
+    _assert_discrete_identical(d_f, d_s, e_f, e_s)
+    np.testing.assert_array_equal(np.asarray(e_f.relaunches),
+                                  np.asarray(e_s.relaunches))
+    for h_f, h_s in zip(d_f.history, d_s.history):
+        for key in ("esc_relaunch", "esc_reinit", "esc_dead"):
+            assert h_f[key] == h_s[key], key
+    # the injection rate is chosen so tier 2 actually fires: a run where
+    # no streak ever reaches 2 would not exercise the reinit halo hop
+    assert sum(h["esc_reinit"] for h in d_s.history) > 0
+
+
+@multidevice
+def test_elastic_resume_shrunken_mesh(tmp_path):
+    """THE elastic-restart acceptance criterion: kill a sharded run on 8
+    devices, resume it on a 4-device mesh — same discrete trajectory and
+    report counters as an uninterrupted 8-device run."""
+    from repro.obs import Telemetry
+
+    def make(ckpt_dir=None):
+        cfg = RepExConfig(dimensions=(("temperature", 8),),
+                          md_steps_per_cycle=2, n_cycles=8)
+        return REMDDriver(HarmonicEngine(), cfg, ckpt_dir=ckpt_dir,
+                          ckpt_every=1 if ckpt_dir else 0,
+                          failure_rate=0.3, telemetry=Telemetry())
+
+    ref = make()
+    e_ref = ref.run_sharded(ref.init(), mesh=make_replica_mesh(8),
+                            chunk_cycles=2)
+
+    a = make(str(tmp_path))
+    a.run_sharded(a.init(), mesh=make_replica_mesh(8), n_cycles=4,
+                  chunk_cycles=2)                       # ... lose 4 devices
+
+    b = make(str(tmp_path))
+    e_res = b.resume(via="sharded", mesh=make_replica_mesh(4),
+                     chunk_cycles=2)
+    _assert_discrete_identical(ref, b, e_ref, e_res)
+    rep_r, rep_s = ref.last_report.to_dict(), b.last_report.to_dict()
+    for k in ("attempted", "accepted", "pair_attempt", "pair_accept",
+              "occupancy", "round_trips"):
+        assert rep_r["exchange"][k] == rep_s["exchange"][k], k
+    assert rep_r["failures"] == rep_s["failures"]
+    assert rep_r["cycles"]["total"] == rep_s["cycles"]["total"] == 8
+
+
+@multidevice
+def test_elastic_resume_grown_mesh(tmp_path):
+    """The other direction: a run checkpointed on a 2-shard mesh resumes
+    onto 8 shards (capacity ARRIVES) with the same trajectory."""
+    def make(ckpt_dir=None):
+        cfg = RepExConfig(dimensions=(("temperature", 8),),
+                          md_steps_per_cycle=2, n_cycles=6)
+        return REMDDriver(HarmonicEngine(), cfg, ckpt_dir=ckpt_dir,
+                          ckpt_every=1 if ckpt_dir else 0,
+                          failure_rate=0.3)
+
+    ref = make()
+    e_ref = ref.run_sharded(ref.init(), mesh=make_replica_mesh(2),
+                            chunk_cycles=3)
+    a = make(str(tmp_path))
+    a.run_sharded(a.init(), mesh=make_replica_mesh(2), n_cycles=3,
+                  chunk_cycles=3)
+    b = make(str(tmp_path))
+    e_res = b.resume(via="sharded", mesh=make_replica_mesh(8),
+                     chunk_cycles=3)
+    _assert_discrete_identical(ref, b, e_ref, e_res)
