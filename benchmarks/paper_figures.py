@@ -41,8 +41,13 @@ from repro.md.system import chain_molecule
 REPLICA_COUNTS = (8, 16, 32, 64)
 MD_STEPS = 10
 
-# cycle_fusion JSON destination; ``run.py --json-out PATH`` overrides
+# JSON destination override; ``run.py --json-out PATH`` sets it.
 JSON_OUT = None
+# benches that write a JSON payload (run.py refuses an explicit
+# --json-out whose filter selects more than one of these — they would
+# silently clobber the same path)
+JSON_BENCHES = frozenset({"cycle_fusion", "neighbor_list", "sharded",
+                          "exchange_scaling", "bonded_scaling"})
 
 
 def _time(fn, *args, reps=3):
@@ -520,6 +525,109 @@ def neighbor_list(rows: List[str]):
         json.dump(payload, f, indent=2)
 
 
+def bonded_scaling(rows: List[str]):
+    """Bonded-pass system-size scaling: the dense signed-incidence GEMM
+    contraction vs the sparse slot-table contraction
+    (``MDEngine(bonded="sparse")``).
+
+    Two sweeps, both emitted to ``BENCH_bonded_scaling.json``:
+
+      force   — one jitted bonded force evaluation at
+                N in {64, 256, 1024}: the clean asymptotics with the
+                fitted log-log exponent per path.  The dense path
+                contracts (..., 6, 3, W) edge gradients against the
+                (6, W, N) incidence stack — O(N * W) with W ~ N for
+                chains, so effectively quadratic; the sparse path
+                routes the same gradients through (N, S) slot tables —
+                O(N * S) with S a small topology constant.
+      cycle   — full fused REMD cycle (run_fused) with the sparse
+                nonbonded path on both sides, dense vs sparse bonded:
+                the end-to-end T_MD claim (interleaved A/B,
+                min-of-reps — the PR-3 same-process methodology).
+
+    ``BONDED_SCALING_SMOKE=1`` shrinks both sweeps for CI.
+    """
+    import json
+    import os
+
+    from repro.kernels.chain_forces import ref as ch_ref
+    from repro.md.system import chain_molecule as chain
+
+    smoke = bool(os.environ.get("BONDED_SCALING_SMOKE"))
+    n_rep = 8
+    reps = 2 if smoke else 6
+    n_cycles = 16 if smoke else 48
+    chunk = 8 if smoke else 16
+    force_ns = (64, 256) if smoke else (64, 256, 1024)
+    cycle_ns = (16, 64) if smoke else (64, 256)
+    cfg = RepExConfig(dimensions=(("temperature", n_rep),),
+                      md_steps_per_cycle=MD_STEPS, n_cycles=n_cycles)
+    payload: Dict[str, Dict] = {"md_steps_per_cycle": MD_STEPS,
+                                "n_replicas": n_rep, "n_cycles": n_cycles,
+                                "force_pass": {}, "cycle": {}}
+
+    for n in force_ns:
+        sys_ = chain(n)
+        top = ch_ref.chain_topology(sys_)
+        slots = ch_ref.bonded_slots(top)
+        pos = MDEngine(system=sys_).init_state(jax.random.key(0),
+                                               n_rep)["pos"]
+        f_d = jax.jit(lambda p: ch_ref.bonded_forces(p, top)[0])
+        f_s = jax.jit(
+            lambda p: ch_ref.bonded_forces_sparse(p, top, slots)[0])
+        for fn in (f_d, f_s):
+            jax.block_until_ready(fn(pos))              # compile both
+        t_d = t_s = float("inf")
+        for _ in range(8):                              # interleaved A/B
+            t_d = min(t_d, _time(f_d, pos, reps=reps))
+            t_s = min(t_s, _time(f_s, pos, reps=reps))
+        t_d, t_s = t_d * 1e6, t_s * 1e6
+        rows.append(f"bonded_force_dense_N{n},{t_d:.0f},"
+                    f"us_per_eval;edge_width={top.edge_width}")
+        rows.append(f"bonded_force_sparse_N{n},{t_s:.0f},"
+                    f"speedup={t_d / t_s:.2f}x;n_slots={slots.n_slots}")
+        payload["force_pass"][str(n)] = {
+            "dense_us": t_d, "sparse_us": t_s,
+            "speedup": t_d / t_s,
+            "edge_width": int(top.edge_width),
+            "n_slots": int(slots.n_slots)}
+
+    for n in cycle_ns:
+        sys_ = chain(n)
+        drv_d = REMDDriver(MDEngine(system=sys_, nonbonded="sparse"), cfg)
+        drv_s = REMDDriver(MDEngine(system=sys_, nonbonded="sparse",
+                                    bonded="sparse"), cfg)
+        best = [float("inf"), float("inf")]
+        for d in (drv_d, drv_s):                        # compile + warm
+            d.run_fused(d.init(), n_cycles=chunk, chunk_cycles=chunk)
+        for _ in range(reps):                           # interleaved A/B
+            for i, d in enumerate((drv_d, drv_s)):
+                e = d.init()
+                t0 = time.perf_counter()
+                d.run_fused(e, n_cycles=n_cycles, chunk_cycles=chunk)
+                best[i] = min(best[i],
+                              (time.perf_counter() - t0) / n_cycles)
+        t_d, t_s = best[0] * 1e6, best[1] * 1e6
+        rows.append(f"bonded_cycle_dense_N{n},{t_d:.0f},us_per_cycle")
+        rows.append(f"bonded_cycle_sparse_N{n},{t_s:.0f},"
+                    f"speedup={t_d / t_s:.2f}x")
+        payload["cycle"][str(n)] = {
+            "dense_us_per_cycle": t_d, "sparse_us_per_cycle": t_s,
+            "speedup": t_d / t_s}
+
+    # fitted log-log exponents over the force sweep (clean asymptotics)
+    ns = np.array([float(n) for n in force_ns])
+    for path in ("dense", "sparse"):
+        ts = np.array([payload["force_pass"][str(int(n))][f"{path}_us"]
+                       for n in ns])
+        exp = float(np.polyfit(np.log(ns), np.log(ts), 1)[0])
+        payload[f"{path}_force_exponent"] = exp
+        rows.append(f"bonded_exponent_{path},0,dlog_t_dlog_N={exp:.2f}")
+
+    with open(JSON_OUT or "BENCH_bonded_scaling.json", "w") as f:
+        json.dump(payload, f, indent=2)
+
+
 def sharded(rows: List[str]):
     """Replica-sharded fused cycles: ``run_sharded`` over a ``("replica",)``
     mesh vs the single-device ``run_fused`` baseline.
@@ -723,4 +831,4 @@ ALL = [fig5_overheads, fig6_1d_weak_scaling, fig7_parallel_efficiency,
        fig8_engine_swap, fig9_mremd_weak, fig10_mremd_strong,
        fig12_multicore_replicas, fig13_async_utilization,
        table1_capabilities, xmat_exchange_scaling, cycle_fusion,
-       neighbor_list, sharded, exchange_scaling]
+       neighbor_list, bonded_scaling, sharded, exchange_scaling]

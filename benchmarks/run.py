@@ -8,14 +8,24 @@ catalogue; roofline.py emits the dry-run-derived §Roofline table).
 ``FILTER`` selects benchmarks by substring; ``--json-out`` redirects the
 JSON payload of benches that emit one (``cycle_fusion`` ->
 ``BENCH_cycle_fusion.json``, ``neighbor_list`` ->
-``BENCH_neighbor_list.json`` by default) — e.g.
+``BENCH_neighbor_list.json``, ``bonded_scaling`` ->
+``BENCH_bonded_scaling.json`` by default) — e.g.
 ``cycle_fusion --json-out BENCH_force_kernel.json`` records the
-force-kernel sweep.  Use a FILTER when redirecting so only one bench
-writes to the override path.
+force-kernel sweep.  An explicit ``--json-out`` requires the FILTER to
+select at most ONE JSON-emitting bench — the harness refuses to let
+several benches silently clobber the same path.
 """
 from __future__ import annotations
 
 import argparse
+
+
+def _sanitize(msg: str) -> str:
+    """Exception text -> CSV-safe derived field: the output stream is
+    ``name,us_per_call,derived`` rows, so an error message carrying
+    commas or newlines would split into phantom columns/rows for any
+    consumer."""
+    return " ".join(str(msg).split()).replace(",", ";")
 
 
 def main() -> None:
@@ -28,17 +38,26 @@ def main() -> None:
     args = parser.parse_args()
 
     from benchmarks import paper_figures as PF
+    selected = [fn for fn in PF.ALL
+                if not args.only or args.only in fn.__name__]
     if args.json_out:
+        emitters = [fn.__name__ for fn in selected
+                    if fn.__name__ in PF.JSON_BENCHES]
+        if len(emitters) > 1:
+            parser.error(
+                f"--json-out selects one output path but the filter "
+                f"matches {len(emitters)} JSON-emitting benches "
+                f"({', '.join(emitters)}); narrow FILTER so only one "
+                f"bench writes there")
         PF.JSON_OUT = args.json_out
     print("name,us_per_call,derived", flush=True)
-    for fn in PF.ALL:
-        if args.only and args.only not in fn.__name__:
-            continue
+    for fn in selected:
         rows = []
         try:
             fn(rows)
         except Exception as e:  # noqa: BLE001 — keep the harness running
-            rows.append(f"{fn.__name__},0,ERROR={type(e).__name__}:{e}")
+            rows.append(f"{fn.__name__},0,"
+                        f"ERROR={type(e).__name__}:{_sanitize(e)}")
         for r in rows:
             print(r, flush=True)
 

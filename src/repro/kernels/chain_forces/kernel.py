@@ -27,6 +27,14 @@ Outputs: forces (R, 8, Np) (rows 0..2) and the bonded energy (R, 1)
 accumulated in the same sweep.  The gradient math is the hand-derived
 set documented in ``ref.py`` — the kernel and the jnp oracle are the
 same formulas in two layouts.
+
+Dense-vs-sparse dispatch contract: this kernel keeps the dense one-hot
+MXU contraction even when the engine selects ``bonded="sparse"`` — on
+the systolic array the (8, Tp) @ (Tp, Np) matmul is effectively free at
+these widths, while a slot-table gather would fight the lane layout.
+The sparse O(N·S) contraction (``ref.bonded_forces_sparse``) is the
+*CPU* large-N path; ``ops.bonded_forces(sparse=...)`` routes between
+them and the tests pin exchange decisions bitwise across both.
 """
 from __future__ import annotations
 

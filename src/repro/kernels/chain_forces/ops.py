@@ -10,6 +10,16 @@ it, so the hot loop carries only array inputs.
 interpret mode is a correctness harness — and the replica-grid Pallas
 kernel when ``use_kernel`` is set (or on TPU backends via
 ``default_use_kernel``).
+
+``sparse=True`` selects the sparse bonded contraction
+(`ref.bonded_forces_sparse`): the per-edge gradients are routed to
+atoms through precomputed (N, S) slot tables instead of the dense
+(6, W, N) incidence GEMM, turning the contraction O(N·W) -> O(N·S)
+with S a small topology constant.  The Pallas kernel keeps the dense
+one-hot MXU contraction regardless — on the systolic array the dense
+matmul is effectively free at these widths and the gather layout is
+hostile — so ``sparse`` only redirects the jnp (CPU) path; both paths
+are pinned bitwise-equal on exchange decisions in the tests.
 """
 from __future__ import annotations
 
@@ -38,6 +48,7 @@ class ChainForcePack(NamedTuple):
     quad_par: jax.Array       # (8, qp): rows 0 = n, 1 = k, 2 = phase,
                               #          3 = is_phi, 4 = is_psi
     top: ref.ChainTopology    # plain-array topology for the jnp path
+    slots: ref.BondedSlots    # (N, S) inverted incidence for sparse path
 
 
 def build_pack(system, lane: int = 128) -> ChainForcePack:
@@ -84,6 +95,7 @@ def build_pack(system, lane: int = 128) -> ChainForcePack:
         quad_par=jnp.asarray(par(qp, (top.quad_n, top.quad_k,
                                       top.quad_phase, is_phi, is_psi))),
         top=top,
+        slots=ref.bonded_slots(top),
     )
 
 
@@ -101,14 +113,20 @@ def bonded_forces(pos, pack: ChainForcePack,
                   umbrella_center: Optional[jax.Array] = None,
                   umbrella_k: Optional[jax.Array] = None,
                   use_kernel: Optional[bool] = None,
-                  interpret: Optional[bool] = None):
+                  interpret: Optional[bool] = None,
+                  sparse: bool = False):
     """(R, N, 3) stack -> (forces (R, N, 3), e_bonded (R,)).
 
     Analytic bonds + angles + torsions + umbrella bias; jnp oracle by
-    default, Pallas kernel on TPU / when ``use_kernel`` is set."""
+    default, Pallas kernel on TPU / when ``use_kernel`` is set.
+    ``sparse`` selects the slot-table contraction on the jnp path
+    (linear in N); the kernel path stays dense-MXU either way."""
     if use_kernel is None:
         use_kernel = default_use_kernel()
     if not use_kernel:
+        if sparse:
+            return ref.bonded_forces_sparse(pos, pack.top, pack.slots,
+                                            umbrella_center, umbrella_k)
         return ref.bonded_forces(pos, pack.top, umbrella_center, umbrella_k)
     interp = default_interpret() if interpret is None else interpret
     coords = pack_coords(pos, pack.n_pad)

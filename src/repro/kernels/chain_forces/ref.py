@@ -118,16 +118,17 @@ def chain_topology(system) -> ChainTopology:
 
 
 
-def bonded_forces(pos, top: ChainTopology,
-                  umbrella_center: Optional[jax.Array] = None,
-                  umbrella_k: Optional[jax.Array] = None):
-    """Analytic bonded + bias force field for a replica stack.
+def _edge_grads(pos, top: ChainTopology,
+                umbrella_center: Optional[jax.Array] = None,
+                umbrella_k: Optional[jax.Array] = None):
+    """Per-EDGE gradient tensors + bonded energy — the O(W) half both
+    contraction paths share.
 
-    pos: (..., N, 3); umbrella_center/umbrella_k: (..., U) per-replica
-    (U in {1, 2}; None disables the bias and constant-folds it away).
-    Returns (force (..., N, 3), e_bonded (...,)) with e_bonded the
-    ctrl-independent bond+angle+torsion energy (bias excluded — it is
-    not part of the u_base feature).
+    Returns (edges (..., 6, 3, W), e_bonded (...,)): one lane-padded
+    gradient-vector row per role [bond d | angle v1 | angle v2 | quad b0
+    | quad b1 | quad b2].  The dense path contracts ``edges`` against
+    the signed incidence stack (O(N * W) GEMM); the sparse path gathers
+    the slots each atom touches (O(N * S)).
 
     Layout notes (XLA-CPU measured, each worth >20% on the propagate hot
     path — see ROADMAP §Performance):
@@ -139,11 +140,7 @@ def bonded_forces(pos, top: ChainTopology,
         (..., 3, W) NATURALLY, with no per-component stack/concatenate
         feeding the scatter (XLA-CPU's fused-concatenate emitter walks a
         per-element operand branch chain that re-computes producer
-        chains — measured ~5x slower than this form);
-      * the scatter-add onto atoms is ONE role-batched dense contraction
-        against ``top.inc_stack`` (``.at[].add`` would lower to a serial
-        while loop on CPU; six separate per-role GEMMs pay five extra
-        Eigen dispatches).
+        chains — measured ~5x slower than this form).
     """
     nb, na, nq = top.bonds.shape[0], top.angles.shape[0], top.quads.shape[0]
     # role-major index layout: [bond_i | bond_j | ang_a | ang_b | ang_c
@@ -229,8 +226,103 @@ def bonded_forces(pos, top: ChainTopology,
                        pad_w(ex(c0) * n1v),
                        pad_w(ex(d1a) * n1v + ex(d1b) * n2v),
                        pad_w(ex(c2) * n2v)], axis=-3)      # (..., 6, 3, W)
+    return edges, e_bond + e_angle + e_dih
+
+
+def bonded_forces(pos, top: ChainTopology,
+                  umbrella_center: Optional[jax.Array] = None,
+                  umbrella_k: Optional[jax.Array] = None):
+    """Analytic bonded + bias force field for a replica stack — the
+    DENSE incidence contraction (the oracle; ``MDEngine(bonded="dense")``).
+
+    pos: (..., N, 3); umbrella_center/umbrella_k: (..., U) per-replica
+    (U in {1, 2}; None disables the bias and constant-folds it away).
+    Returns (force (..., N, 3), e_bonded (...,)) with e_bonded the
+    ctrl-independent bond+angle+torsion energy (bias excluded — it is
+    not part of the u_base feature).
+
+    The scatter-add onto atoms is ONE role-batched dense contraction
+    against ``top.inc_stack`` (``.at[].add`` would lower to a serial
+    while loop on CPU; six separate per-role GEMMs pay five extra Eigen
+    dispatches).  The contraction is O(N * W) per role — effectively
+    quadratic for chains, which is why :func:`bonded_forces_sparse`
+    exists for large N.
+    """
+    edges, e = _edge_grads(pos, top, umbrella_center, umbrella_k)
     out = jax.lax.dot_general(
         edges, top.inc_stack,
         (((edges.ndim - 1,), (1,)), ((edges.ndim - 3,), (0,))))
     force = -jnp.swapaxes(jnp.sum(out, axis=0), -1, -2)    # (..., N, 3)
-    return force, e_bond + e_angle + e_dih
+    return force, e
+
+
+class BondedSlots(NamedTuple):
+    """Static per-atom gather tables for the sparse bonded contraction.
+
+    The signed incidence stack (6, W, N) is column-sparse: each atom is
+    touched by a BOUNDED number of (role, edge) slots — for a linear
+    chain at most 2 bonds + 4 angle arms + 6 torsion edges, independent
+    of N.  Inverting it host-side gives, per atom, the flattened slot
+    index ``role * W + w`` and its sign; the scatter-add then becomes a
+    gather + S-axis sum (the neighbor-list ``_slot_force`` pattern):
+    O(N * S) instead of the dense contraction's O(N * W) — linear in N
+    with no ``.at[].add`` scatter (serial on XLA-CPU) anywhere.
+    """
+    idx: jax.Array    # (N, S) int32 — flattened (role * W + w) slots
+    sign: jax.Array   # (N, S) f32 — +1 head / -1 tail / 0 padding
+    n_slots: int      # S = max per-atom incidence count
+
+
+def bonded_slots(top: ChainTopology) -> BondedSlots:
+    """Invert the signed incidence stack into per-atom gather tables
+    (host-side, once — engines build this next to the topology)."""
+    import numpy as np
+    inc = np.asarray(top.inc_stack)                        # (6, W, N)
+    n, w = inc.shape[2], inc.shape[1]
+    role, edge, atom = np.nonzero(inc)
+    order = np.argsort(atom, kind="stable")
+    atom, flat = atom[order], (role * w + edge)[order]
+    sign = inc[role[order], edge[order], atom]
+    first = np.searchsorted(atom, atom, side="left")
+    rank = np.arange(len(atom)) - first
+    s = max(int(rank.max(initial=0)) + 1, 1) if len(atom) else 1
+    idx = np.zeros((n, s), np.int32)
+    sgn = np.zeros((n, s), np.float32)
+    idx[atom, rank] = flat
+    sgn[atom, rank] = sign
+    return BondedSlots(idx=jnp.asarray(idx), sign=jnp.asarray(sgn),
+                       n_slots=s)
+
+
+def bonded_forces_sparse(pos, top: ChainTopology, slots: BondedSlots,
+                         umbrella_center: Optional[jax.Array] = None,
+                         umbrella_k: Optional[jax.Array] = None):
+    """Analytic bonded + bias forces via the SPARSE slot-gather
+    contraction (``MDEngine(bonded="sparse")``) — same per-edge gradient
+    math as :func:`bonded_forces` (shared ``_edge_grads``), but the
+    scatter-add onto atoms is a static gather + S-axis sum over the
+    per-atom slot tables instead of the (6, W) x (W, N) incidence GEMMs:
+    O(N * S) total with S a topology constant, so the whole bonded pass
+    is linear in N.
+
+    XLA-CPU lessons respected: no ``.at[].add`` (the accumulation is a
+    plain masked sum over a gathered axis), component-split gathers
+    (x/y/z planes gathered separately from the flattened (..., 3, 6W)
+    edge buffer — one rank-3 gather per component, no rank-4 tensor),
+    and the per-term-class gradient geometry is untouched.
+
+    Matches the dense contraction to float reduction-order rounding
+    (the slot sum and the GEMM accumulate the same signed terms in
+    different orders); pinned in tests/test_chain_forces.py.
+    """
+    edges, e = _edge_grads(pos, top, umbrella_center, umbrella_k)
+    # (..., 6, 3, W) -> (..., 3, 6*W): one materialized flat edge buffer
+    # (the gather forces materialization anyway; role-major flat index
+    # matches BondedSlots.idx = role * W + w)
+    flat = jnp.swapaxes(edges, -3, -2).reshape(
+        edges.shape[:-3] + (3, 6 * top.edge_width))
+    force = -jnp.stack(
+        [jnp.sum(slots.sign * jnp.take(flat[..., c, :], slots.idx,
+                                       axis=-1), axis=-1)
+         for c in range(3)], axis=-1)                      # (..., N, 3)
+    return force, e

@@ -181,14 +181,20 @@ def nonbonded_sparse_batched(pos, lj_sigma, lj_eps, charges, idx, valid,
 
 def nonbonded_sparse(pos, lj_sigma, lj_eps, charges, idx, valid,
                      cutoff: float, use_kernel: Optional[bool] = None,
-                     block: int = 128, interpret: Optional[bool] = None):
+                     block: int = 128, interpret: Optional[bool] = None,
+                     pair=None):
     """Dispatching entry point for the sparse nonbonded pass (mirror of
-    :func:`nonbonded`): jnp oracle off-TPU, Pallas kernel on TPU."""
+    :func:`nonbonded`): jnp oracle off-TPU, Pallas kernel on TPU.
+
+    ``pair`` (optional (..., 3, N, K) build-time parameter planes) is a
+    jnp-path feature: the kernel gathers params from its packed (8, N)
+    rows natively (slot-major planes would triple its VMEM inputs), so
+    the kernel path ignores it — numerics are pinned identical anyway."""
     if use_kernel is None:
         use_kernel = default_use_kernel()
     if not use_kernel:
         return ref.nonbonded_sparse(pos, lj_sigma, lj_eps, charges, idx,
-                                    valid, cutoff)
+                                    valid, cutoff, pair)
     return nonbonded_sparse_batched(pos, lj_sigma, lj_eps, charges, idx,
                                     valid, cutoff, block=block,
                                     interpret=interpret)
@@ -198,14 +204,17 @@ def nonbonded_force_sparse(pos, lj_sigma, lj_eps, charges, idx, valid,
                            cutoff: float, salt_scale=None,
                            use_kernel: Optional[bool] = None,
                            block: int = 128,
-                           interpret: Optional[bool] = None):
+                           interpret: Optional[bool] = None,
+                           pair=None):
     """Combined (salt-folded) sparse nonbonded force for the propagate
-    loop: (R, N, 3) -> (R, N, 3)."""
+    loop: (R, N, 3) -> (R, N, 3).  ``pair`` as in
+    :func:`nonbonded_sparse` (jnp path only)."""
     if use_kernel is None:
         use_kernel = default_use_kernel()
     if not use_kernel:
         return ref.nonbonded_force_sparse(pos, lj_sigma, lj_eps, charges,
-                                          idx, valid, cutoff, salt_scale)
+                                          idx, valid, cutoff, salt_scale,
+                                          pair)
     f_lj, f_el, _, _ = nonbonded_sparse_batched(
         pos, lj_sigma, lj_eps, charges, idx, valid, cutoff, block=block,
         interpret=interpret)

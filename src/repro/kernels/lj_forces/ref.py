@@ -130,7 +130,7 @@ def nonbonded_force(pos, lj_sigma, lj_eps, charges, nb_mask,
 
 
 def _sparse_pair_coefs(pos, lj_sigma, lj_eps, charges, idx, valid,
-                       cutoff: float):
+                       cutoff: float, pair=None):
     """Per-slot coefficients/energies: pos (..., N, 3), idx/valid
     (..., N, K) -> (c_lj, c_el, e_lj, e_el, (dx, dy, dz)).
 
@@ -138,7 +138,15 @@ def _sparse_pair_coefs(pos, lj_sigma, lj_eps, charges, idx, valid,
     (..., N, K) planes — same reason as the dense ``_nonbonded_coefs``:
     a (..., N, K, 3) displacement stack plus a trailing 3-axis reduce
     ends the XLA-CPU fusion; the split keeps the whole sweep one
-    element-wise graph over rank-3 planes."""
+    element-wise graph over rank-3 planes.
+
+    ``pair`` (optional, (..., 3, N, K)) carries the build-time parameter
+    planes [sig^2, eps, COULOMB*qq] (``repro.md.neighbors.pair_planes``,
+    slot-aligned with ``idx``): with them the per-step parameter gathers
+    vanish and the coefficient math is BITWISE identical — each plane
+    precomputes exactly the sub-expression the gather path forms first
+    (``sig*sig``, ``eps``, ``COULOMB*qq``), so the remaining float-op
+    order is unchanged."""
     n = pos.shape[-2]
     j = jnp.clip(idx, 0, n - 1)                 # padding gathers atom n-1,
     flat = j.reshape(j.shape[:-2] + (-1,))      # masked to zero below
@@ -153,15 +161,21 @@ def _sparse_pair_coefs(pos, lj_sigma, lj_eps, charges, idx, valid,
     r2 = dx * dx + dy * dy + dz * dz
     mask = valid * (r2 <= cutoff * cutoff)
     r2 = r2 + (1.0 - mask)                      # guard padded / self slots
-    sig = 0.5 * (lj_sigma[..., :, None] + lj_sigma[j])
-    eps = jnp.sqrt(lj_eps[..., :, None] * lj_eps[j])
-    qq = charges[..., :, None] * charges[j]
-    s6 = (sig * sig / r2) ** 3
+    if pair is None:
+        sig = 0.5 * (lj_sigma[..., :, None] + lj_sigma[j])
+        sig2 = sig * sig
+        eps = jnp.sqrt(lj_eps[..., :, None] * lj_eps[j])
+        cqq = COULOMB * (charges[..., :, None] * charges[j])
+    else:
+        sig2 = pair[..., 0, :, :]
+        eps = pair[..., 1, :, :]
+        cqq = pair[..., 2, :, :]
+    s6 = (sig2 / r2) ** 3
     r = jnp.sqrt(r2)
     c_lj = 24.0 * eps * (2.0 * s6 * s6 - s6) / r2 * mask
-    c_el = COULOMB * qq / (r2 * r) * mask
+    c_el = cqq / (r2 * r) * mask
     e_lj = 0.5 * jnp.sum(4.0 * eps * (s6 * s6 - s6) * mask, axis=(-2, -1))
-    e_el = 0.5 * jnp.sum(COULOMB * qq / r * mask, axis=(-2, -1))
+    e_el = 0.5 * jnp.sum(cqq / r * mask, axis=(-2, -1))
     return c_lj, c_el, e_lj, e_el, (dx, dy, dz)
 
 
@@ -172,24 +186,25 @@ def _slot_force(coef, comps):
 
 
 def nonbonded_sparse(pos, lj_sigma, lj_eps, charges, idx, valid,
-                     cutoff: float):
+                     cutoff: float, pair=None):
     """Sparse analogue of :func:`nonbonded`: LJ + electrostatic forces
     AND both energy accumulators from one O(N * K) neighbor sweep.
 
     Returns ``(f_lj, f_el, e_lj, e_el)`` with the electrostatic pieces
-    UNscaled, exactly like the dense pass.
+    UNscaled, exactly like the dense pass.  ``pair`` passes the optional
+    build-time parameter planes (see :func:`_sparse_pair_coefs`).
     """
     c_lj, c_el, e_lj, e_el, comps = _sparse_pair_coefs(
-        pos, lj_sigma, lj_eps, charges, idx, valid, cutoff)
+        pos, lj_sigma, lj_eps, charges, idx, valid, cutoff, pair)
     return (_slot_force(c_lj, comps), _slot_force(c_el, comps),
             e_lj, e_el)
 
 
 def nonbonded_force_sparse(pos, lj_sigma, lj_eps, charges, idx, valid,
-                           cutoff: float, salt_scale=None):
+                           cutoff: float, salt_scale=None, pair=None):
     """Propagate-loop variant: one combined sparse nonbonded force."""
     c_lj, c_el, _, _, comps = _sparse_pair_coefs(
-        pos, lj_sigma, lj_eps, charges, idx, valid, cutoff)
+        pos, lj_sigma, lj_eps, charges, idx, valid, cutoff, pair)
     if salt_scale is not None:
         c_el = salt_scale[..., None, None] * c_el
     return _slot_force(c_lj + c_el, comps)

@@ -333,29 +333,32 @@ def batched_features(pos, sys: MolecularSystem) -> Dict[str, jax.Array]:
 
 
 def sparse_pair_energies(pos, sys: MolecularSystem, idx, valid,
-                         cutoff: float, use_kernel: bool = False
-                         ) -> Tuple[jax.Array, jax.Array]:
+                         cutoff: float, use_kernel: bool = False,
+                         pair=None) -> Tuple[jax.Array, jax.Array]:
     """(LJ, elec) energies from the O(N * K) neighbor-list sweep.
 
     The sparse analogue of :func:`_batched_pair_terms` — the TRUNCATED
     potential (pairs beyond ``cutoff`` contribute zero), which is the
     potential the sparse propagate path actually simulates, so exchange
-    energies and MD forces describe the same physics."""
+    energies and MD forces describe the same physics.  ``pair`` passes
+    the optional build-time parameter planes (neighbor-list ``pair``
+    leaf) through to the sweep."""
     from repro.kernels.lj_forces import ops as nb_ops
     _, _, e_lj, e_el = nb_ops.nonbonded_sparse(
         pos, sys.lj_sigma, sys.lj_eps, sys.charges, idx, valid, cutoff,
-        use_kernel=use_kernel)
+        use_kernel=use_kernel, pair=pair)
     return e_lj, e_el
 
 
 def sparse_features(pos, sys: MolecularSystem, idx, valid, cutoff: float,
-                    use_kernel: bool = False) -> Dict[str, jax.Array]:
+                    use_kernel: bool = False, pair=None
+                    ) -> Dict[str, jax.Array]:
     """Per-replica features under the neighbor-list truncated potential:
     same keys/shapes as :func:`batched_features`, with the pairwise sums
     evaluated on the (R, N, K) list instead of all (R, N, N) pairs."""
     e_bonded, phi, psi = _batched_bonded_terms(pos, sys)
     e_lj, e_elec = sparse_pair_energies(pos, sys, idx, valid, cutoff,
-                                        use_kernel=use_kernel)
+                                        use_kernel=use_kernel, pair=pair)
     return {
         "u_base": e_bonded + e_lj,
         "u_elec": e_elec,

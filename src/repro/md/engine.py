@@ -66,6 +66,7 @@ from repro.md.system import (MolecularSystem, base_positions,
 
 FORCE_PATHS = ("pallas", "batched", "vmap")
 NONBONDED_PATHS = ("dense", "sparse")
+BONDED_PATHS = ("dense", "sparse")
 
 
 def _any_nonfinite(state) -> jax.Array:
@@ -109,6 +110,8 @@ class MDEngine:
                  skin: float = 1.5, k_max: Optional[int] = None,
                  nlist_build: Optional[str] = None,
                  cell_capacity: Optional[int] = None,
+                 bonded: str = "dense",
+                 nb_pair_planes: Optional[bool] = None,
                  max_energy: Optional[float] = None,
                  max_bond_stretch: Optional[float] = None):
         """``force_path``: "pallas" (analytic, default), "batched"
@@ -137,6 +140,26 @@ class MDEngine:
         into the same ``nb_overflow`` accounting — an explicit cap
         bounds memory, and a too-tight one is visible in the driver
         stats, never silent.
+
+        ``bonded``: "dense" (default — the signed-incidence GEMM
+        contraction, O(N * W) per term class) or "sparse" (the
+        slot-table contraction, O(N * S) with S a small topology
+        constant — linear in N; see kernels/chain_forces).  Sparse
+        requires the analytic force path.  Both contract the SAME
+        per-edge gradients, so forces agree to float tolerance and
+        exchange decisions bit-for-bit (the contraction feeds the
+        integrator, not the feature pass); on TPU the Pallas kernel
+        keeps its dense MXU contraction either way.
+
+        ``nb_pair_planes``: precompute the sparse nonbonded pass's
+        mixing-rule parameters (sig^2 / eps / COULOMB*qq) into the
+        neighbor list at build time, dropping three per-step gathers.
+        The planes path is bitwise-identical per evaluation to the
+        gather path.  Default (None): enabled whenever
+        ``nonbonded="sparse"`` on the jnp path — build cost is
+        amortized over the list lifetime, and the per-step sweep
+        becomes purely element-wise.  Only meaningful with
+        ``nonbonded="sparse"``.
 
         ``max_energy`` / ``max_bond_stretch``: opt-in failure-detection
         thresholds broadening ``is_failed`` beyond the non-finite scan
@@ -175,8 +198,20 @@ class MDEngine:
             raise ValueError(
                 f"nonbonded='sparse' is an analytic-force feature; it "
                 f"cannot run force_path={force_path!r}")
+        if bonded not in BONDED_PATHS:
+            raise ValueError(f"bonded must be one of {BONDED_PATHS}, "
+                             f"got {bonded!r}")
+        if bonded == "sparse" and force_path != "pallas":
+            raise ValueError(
+                f"bonded='sparse' is an analytic-force feature; it "
+                f"cannot run force_path={force_path!r}")
+        if nb_pair_planes and nonbonded != "sparse":
+            raise ValueError(
+                "nb_pair_planes=True needs nonbonded='sparse' (there is "
+                "no neighbor list to carry the planes otherwise)")
         self.force_path = force_path
         self.nonbonded = nonbonded
+        self.bonded = bonded
         self.max_energy = None if max_energy is None else float(max_energy)
         self.max_bond_stretch = (None if max_bond_stretch is None
                                  else float(max_bond_stretch))
@@ -192,6 +227,13 @@ class MDEngine:
             self.cutoff = float(cutoff)
             self.skin = float(skin)
             self.r_list = self.cutoff + self.skin
+            # pair planes ride the jnp path only (the kernel gathers
+            # params from its packed coordinate rows natively)
+            if nb_pair_planes is None:
+                nb_pair_planes = not self._use_kernel
+            self._pair_params = (
+                (self.system.lj_sigma, self.system.lj_eps,
+                 self.system.charges) if nb_pair_planes else None)
             base = base_positions(self.system)
             mask = np.asarray(self.system.nb_mask)
             self.k_max = (NB.suggest_k_max(self.system.n_atoms, base, mask,
@@ -226,7 +268,8 @@ class MDEngine:
         return NB.build_neighbor_list(
             pos, self.system.nb_mask, self.r_list, self.k_max,
             method=self.nlist_build, grid_dims=self._grid_dims,
-            cell_capacity=self._cell_capacity, prev=prev)
+            cell_capacity=self._cell_capacity, prev=prev,
+            pair_params=self._pair_params)
 
     def _refresh_nlist(self, pos, nlist):
         # sync=True: one tripped replica refreshes the whole ensemble —
@@ -237,7 +280,8 @@ class MDEngine:
             pos, nlist, self.system.nb_mask, self.r_list, self.skin,
             self.k_max, method=self.nlist_build,
             grid_dims=self._grid_dims,
-            cell_capacity=self._cell_capacity, sync=True)
+            cell_capacity=self._cell_capacity, sync=True,
+            pair_params=self._pair_params)
 
     def nb_stats(self, state):
         """Per-ensemble neighbor-list health scalars (fixed shape, so
@@ -307,11 +351,12 @@ class MDEngine:
         def force_aux(pos, nlist):
             nlist = self._refresh_nlist(pos, nlist)
             f, _ = chain_ops.bonded_forces(pos, self._pack, u_c, u_k,
-                                           use_kernel=self._use_kernel)
+                                           use_kernel=self._use_kernel,
+                                           sparse=self.bonded == "sparse")
             f = f + nb_ops.nonbonded_force_sparse(
                 pos, sys.lj_sigma, sys.lj_eps, sys.charges,
                 nlist["idx"], nlist["valid"], self.cutoff, salt_scale,
-                use_kernel=self._use_kernel)
+                use_kernel=self._use_kernel, pair=nlist.get("pair"))
             return f, nlist
 
         md_state = {"pos": state["pos"], "vel": state["vel"]}
@@ -336,7 +381,8 @@ class MDEngine:
 
         def force_fn(pos):
             f, _ = chain_ops.bonded_forces(pos, self._pack, u_c, u_k,
-                                           use_kernel=self._use_kernel)
+                                           use_kernel=self._use_kernel,
+                                           sparse=self.bonded == "sparse")
             return f + nb_ops.nonbonded_force(
                 pos, sys.lj_sigma, sys.lj_eps, sys.charges, sys.nb_mask,
                 salt_scale, use_kernel=self._use_kernel)
@@ -391,7 +437,8 @@ class MDEngine:
             nl = state["nlist"]
             return E.sparse_features(state["pos"], self.system,
                                      nl["idx"], nl["valid"], self.cutoff,
-                                     use_kernel=self._use_kernel)
+                                     use_kernel=self._use_kernel,
+                                     pair=nl.get("pair"))
         if self.batched:
             return E.batched_features(state["pos"], self.system)
         sys = self.system

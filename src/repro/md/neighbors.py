@@ -33,6 +33,14 @@ Capacity overflows (more true neighbors than ``k_max``, or more atoms
 in a cell than ``cell_capacity``) are NEVER silent: the dropped-pair
 count accumulates in ``overflow`` and the engines surface it as a
 per-cycle driver stat (``nb_overflow``).
+
+The list can also carry build-time PAIR-PARAMETER planes
+(``pair_planes``): per-slot sig^2 / eps / COULOMB*qq stacked on a
+(..., 3, N, K) leaf, slot-aligned with ``idx``.  Mixing-rule parameters
+depend only on the (i, j) identity, not positions, so they are constant
+for the list's lifetime — precomputing them at build time drops three
+per-step gathers from the sparse force pass at the cost of three extra
+planes in the scan carry.
 """
 from __future__ import annotations
 
@@ -49,6 +57,8 @@ import numpy as np
 #   ref_pos  (R, N, 3) f32    — positions at build time (skin check)
 #   overflow (R,)      int32  — cumulative count of DROPPED pairs
 #   rebuilds (R,)      int32  — cumulative rebuild count per replica
+#   pair     (R, 3, N, K) f32 — OPTIONAL build-time parameter planes
+#                               [sig^2, eps, COULOMB*qq] (pair_planes)
 NeighborList = Dict[str, jax.Array]
 
 
@@ -226,15 +236,40 @@ def build_cells(pos: jax.Array, nb_mask: jax.Array, r_list: float,
 # -- public API ------------------------------------------------------------
 
 
+def pair_planes(idx: jax.Array, lj_sigma: jax.Array, lj_eps: jax.Array,
+                charges: jax.Array) -> jax.Array:
+    """Build-time per-slot parameter planes: idx (..., N, K) ->
+    (..., 3, N, K) stack [sig^2, eps, COULOMB * qq].
+
+    Each plane precomputes EXACTLY the sub-expression the gather path
+    of ``lj_forces.ref._sparse_pair_coefs`` forms first (same float-op
+    order: ``sig*sig`` with sig the Lorentz mean, ``sqrt(eps_i*eps_j)``,
+    ``COULOMB*(q_i*q_j)``), so consuming the planes is bitwise
+    identical to gathering per step.  Padding slots (idx == N) clip to
+    atom N-1 like the force pass; their values are masked out there.
+    """
+    from repro.kernels.lj_forces.ref import COULOMB
+    n = lj_sigma.shape[-1]
+    j = jnp.clip(idx, 0, n - 1)
+    sig = 0.5 * (lj_sigma[..., :, None] + lj_sigma[j])
+    eps = jnp.sqrt(lj_eps[..., :, None] * lj_eps[j])
+    cqq = COULOMB * (charges[..., :, None] * charges[j])
+    return jnp.stack([sig * sig, eps, cqq], axis=-3)
+
+
 def build_neighbor_list(pos: jax.Array, nb_mask: jax.Array, r_list: float,
                         k_max: int, *, method: str = "dense",
                         grid_dims: Tuple[int, int, int] = (1, 1, 1),
                         cell_capacity: int = 8,
-                        prev: NeighborList = None) -> NeighborList:
+                        prev: NeighborList = None,
+                        pair_params=None) -> NeighborList:
     """Build a fresh neighbor list for a (R, N, 3) stack.
 
     ``prev`` carries the cumulative overflow/rebuild counters forward
     (pass the outgoing list on a rebuild; None zeroes them).
+    ``pair_params`` (lj_sigma, lj_eps, charges) adds the ``pair``
+    parameter-plane leaf (:func:`pair_planes`); a list built with
+    planes must be rebuilt with planes (scan-carry structure).
     """
     if method == "cell":
         idx, valid, dropped = build_cells(pos, nb_mask, r_list, k_max,
@@ -249,8 +284,11 @@ def build_neighbor_list(pos: jax.Array, nb_mask: jax.Array, r_list: float,
     if prev is not None:
         overflow = overflow + prev["overflow"]
         rebuilds = prev["rebuilds"]
-    return {"idx": idx, "valid": valid, "ref_pos": pos,
-            "overflow": overflow, "rebuilds": rebuilds}
+    out = {"idx": idx, "valid": valid, "ref_pos": pos,
+           "overflow": overflow, "rebuilds": rebuilds}
+    if pair_params is not None:
+        out["pair"] = pair_planes(idx, *pair_params)
+    return out
 
 
 def needs_rebuild(pos: jax.Array, nlist: NeighborList, skin: float
@@ -267,7 +305,8 @@ def maybe_rebuild(pos: jax.Array, nlist: NeighborList, nb_mask: jax.Array,
                   method: str = "dense",
                   grid_dims: Tuple[int, int, int] = (1, 1, 1),
                   cell_capacity: int = 8,
-                  sync: bool = False) -> NeighborList:
+                  sync: bool = False,
+                  pair_params=None) -> NeighborList:
     """Skin check + conditional on-device rebuild (scan-body safe).
 
     The O(N * candidates) build runs under a ``lax.cond`` on the scalar
@@ -294,7 +333,7 @@ def maybe_rebuild(pos: jax.Array, nlist: NeighborList, nb_mask: jax.Array,
         fresh = build_neighbor_list(pos, nb_mask, r_list, k_max,
                                     method=method, grid_dims=grid_dims,
                                     cell_capacity=cell_capacity,
-                                    prev=nlist)
+                                    prev=nlist, pair_params=pair_params)
 
         def sel(new, old):
             shape = (take.shape[0],) + (1,) * (new.ndim - 1)
@@ -328,8 +367,11 @@ def suggest_cell_capacity(positions: np.ndarray, r_list: float,
                           safety: float = 4.0,
                           max_capacity: Optional[int] = None) -> int:
     """Host-side per-cell capacity heuristic: peak occupancy of the
-    reference configuration binned with the same geometry the device
+    reference configuration(s) binned with the same geometry the device
     build uses, times a safety factor (clamped to [8, N]).
+    ``positions`` may be one (N, 3) configuration or an (R, N, 3)
+    replica stack — stacks size to the max occupancy across replicas
+    (per-replica perturbed starts can exceed any single snapshot).
 
     ``max_capacity`` CAPS the suggestion (memory bound: the cell build's
     candidate buffer is N x 27*capacity).  A cap below the runtime peak
@@ -343,15 +385,19 @@ def suggest_cell_capacity(positions: np.ndarray, r_list: float,
     true occupancy so they stay on the dense build (the N=1024
     compact-chain pin in tests/test_neighbor_list.py).
     """
-    p = np.asarray(positions, np.float64)
+    stack = np.asarray(positions, np.float64)
+    if stack.ndim == 2:           # single config -> (1, N, 3) stack
+        stack = stack[None]
     g = np.asarray(grid_dims, np.float64)
-    lo, hi = p.min(0), p.max(0)
-    width = np.maximum((hi - lo) / g, max(r_list, 1e-6))
-    cc = np.clip(np.floor((p - lo) / width).astype(int), 0,
-                 np.asarray(grid_dims) - 1)
-    ids = (cc[:, 0] * grid_dims[1] + cc[:, 1]) * grid_dims[2] + cc[:, 2]
-    peak = int(np.bincount(ids).max())
-    cap = int(np.clip(int(np.ceil(peak * safety)), 8, p.shape[0]))
+    peak = 0                      # size to the WORST replica: per-replica
+    for p in stack:               # perturbed starts can beat any single
+        lo, hi = p.min(0), p.max(0)   # snapshot's occupancy
+        width = np.maximum((hi - lo) / g, max(r_list, 1e-6))
+        cc = np.clip(np.floor((p - lo) / width).astype(int), 0,
+                     np.asarray(grid_dims) - 1)
+        ids = (cc[:, 0] * grid_dims[1] + cc[:, 1]) * grid_dims[2] + cc[:, 2]
+        peak = max(peak, int(np.bincount(ids).max()))
+    cap = int(np.clip(int(np.ceil(peak * safety)), 8, stack.shape[1]))
     if max_capacity is not None:
         cap = max(min(cap, int(max_capacity)), 1)
     return cap
@@ -383,16 +429,22 @@ def suggest_build_method(n_atoms: int, grid_dims: Tuple[int, int, int],
 def suggest_k_max(n_atoms: int, positions: np.ndarray, nb_mask: np.ndarray,
                   r_list: float, safety: float = 1.5) -> int:
     """Host-side K_max heuristic: max neighbor count of a reference
-    configuration times a safety margin (thermal fluctuation + the mild
+    configuration — or the max across an (R, N, 3) replica stack, since
+    per-replica perturbed starts can exceed any single snapshot's peak —
+    times a safety margin (thermal fluctuation + the mild
     compaction a weakly-attractive chain sees at equilibrium; measured
     ~10 % over the extended-chain count at 300 K).  Clamped to
     [8, n_atoms - 1]; K_max directly scales the per-step sweep, so the
     margin is deliberately tight — overflow is recorded at runtime
     (``nb_overflow``), so an undersized guess is observable, not
     silent."""
-    p = np.asarray(positions, np.float64)
-    d2 = np.sum((p[:, None, :] - p[None, :, :]) ** 2, axis=-1)
-    within = (d2 <= r_list * r_list) & (np.asarray(nb_mask) > 0)
-    base = int(within.sum(axis=1).max())
+    stack = np.asarray(positions, np.float64)
+    if stack.ndim == 2:           # single config -> (1, N, 3) stack
+        stack = stack[None]
+    base = 0                      # max over replicas: per-replica
+    for p in stack:               # perturbed starts can beat any single
+        d2 = np.sum((p[:, None, :] - p[None, :, :]) ** 2, axis=-1)
+        within = (d2 <= r_list * r_list) & (np.asarray(nb_mask) > 0)
+        base = max(base, int(within.sum(axis=1).max()))
     return int(np.clip(int(np.ceil(base * safety)), 8,
                        max(n_atoms - 1, 8)))

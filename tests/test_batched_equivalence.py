@@ -174,6 +174,37 @@ def test_run_fused_exchange_decisions_across_force_paths(force_path, chunk):
             assert h[key] == hb[key], key
 
 
+@pytest.mark.parametrize("bonded", ["dense", "sparse"])
+@pytest.mark.parametrize("nonbonded", ["dense", "sparse"])
+@pytest.mark.parametrize("chunk", [2, 3])
+def test_run_fused_exchange_decisions_across_bonded_paths(bonded,
+                                                          nonbonded,
+                                                          chunk):
+    """PR-9 acceptance pin: ``run_fused`` exchange decisions are
+    bitwise-identical across ``bonded`` x ``nonbonded`` x chunk sizes
+    (dense/dense/chunk=3 is the baseline).  The sparse nonbonded legs
+    use a full-capture list (cutoff beyond every pair, k_max = N - 1)
+    so all four cells simulate the same physics; the sparse bonded
+    contraction reorders only float accumulation."""
+    cfg = RepExConfig(dimensions=DIMS, md_steps_per_cycle=3, n_cycles=6)
+
+    def run(bp, nb, ck):
+        kw = {"bonded": bp}
+        if nb == "sparse":
+            kw.update(nonbonded="sparse", cutoff=1e3, k_max=21)
+        d = REMDDriver(MDEngine(**kw), cfg)
+        ens = d.run_fused(d.init(), chunk_cycles=ck)
+        return np.asarray(ens.assignment), d.acceptance, d.history
+
+    base_a, base_acc, base_h = run("dense", "dense", 3)
+    a, acc, hist = run(bonded, nonbonded, chunk)
+    np.testing.assert_array_equal(a, base_a)
+    assert acc == base_acc
+    for h, hb in zip(hist, base_h):
+        for key in ("cycle", "dim", "accept", "attempt", "failed"):
+            assert h[key] == hb[key], key
+
+
 def test_lj_pallas_batched_kernel_vs_ref():
     """Replica-grid Pallas kernels vs the batch-agnostic jnp oracle."""
     from repro.kernels.lj_forces import ops as lj_ops

@@ -1,0 +1,84 @@
+"""Benchmark-harness contract tests (PR-9 satellite).
+
+The bench runner prints a ``name,us_per_call,derived`` CSV stream that
+downstream tooling (README tables, CI artifact diffing) parses by
+splitting on commas.  A bench that *raises* used to inject the raw
+exception text into the derived column — commas became phantom columns
+and newlines phantom rows, silently corrupting every row after the
+failure.  These tests pin the sanitization and the ``--json-out``
+clobber guard without running any real benchmark.
+"""
+import sys
+
+import pytest
+
+from benchmarks import paper_figures as PF
+from benchmarks import run as bench_run
+
+
+def test_sanitize_flattens_csv_hostile_text():
+    s = bench_run._sanitize("bad, news\nsecond line,\ttabbed")
+    assert "," not in s
+    assert "\n" not in s and "\t" not in s
+    assert s == "bad; news second line; tabbed"
+
+
+def _run_main(monkeypatch, argv):
+    monkeypatch.setattr(sys, "argv", ["run.py"] + argv)
+    bench_run.main()
+
+
+def test_error_rows_stay_single_csv_row(monkeypatch, capsys):
+    """A bench raising comma/newline-laden text still yields exactly one
+    well-formed 3-column row."""
+    def boom_bench(rows):
+        raise ValueError("bad, news\nand a second line, too")
+
+    def fine_bench(rows):
+        rows.append("fine_bench,1.5,ok")
+
+    monkeypatch.setattr(PF, "ALL", [boom_bench, fine_bench])
+    _run_main(monkeypatch, [])
+    lines = capsys.readouterr().out.strip().splitlines()
+    assert lines[0] == "name,us_per_call,derived"
+    assert len(lines) == 3          # header + one row per bench, no extras
+    for line in lines[1:]:
+        assert line.count(",") == 2
+    assert lines[1].startswith("boom_bench,0,ERROR=ValueError:")
+    assert "bad; news and a second line; too" in lines[1]
+    assert lines[2] == "fine_bench,1.5,ok"
+
+
+def test_json_out_refuses_multiple_emitters(monkeypatch, capsys):
+    """``--json-out`` with a filter matching >1 JSON-emitting bench must
+    fail fast instead of letting the second bench clobber the first."""
+    def emit_a(rows):
+        rows.append("emit_a,1,ok")
+
+    def emit_b(rows):
+        rows.append("emit_b,1,ok")
+
+    monkeypatch.setattr(PF, "ALL", [emit_a, emit_b])
+    monkeypatch.setattr(PF, "JSON_BENCHES", frozenset({"emit_a", "emit_b"}))
+    with pytest.raises(SystemExit):
+        _run_main(monkeypatch, ["emit", "--json-out", "/tmp/x.json"])
+    assert "emit_a, emit_b" in capsys.readouterr().err
+
+
+def test_json_out_single_emitter_accepted(monkeypatch, capsys, tmp_path):
+    """A narrowed filter with exactly one emitter sets the override and
+    runs normally."""
+    def emit_a(rows):
+        rows.append(f"emit_a,1,{PF.JSON_OUT}")
+
+    def emit_b(rows):
+        rows.append("emit_b,1,ok")
+
+    out = str(tmp_path / "o.json")
+    monkeypatch.setattr(PF, "ALL", [emit_a, emit_b])
+    monkeypatch.setattr(PF, "JSON_BENCHES", frozenset({"emit_a", "emit_b"}))
+    monkeypatch.setattr(PF, "JSON_OUT", None)
+    _run_main(monkeypatch, ["emit_a", "--json-out", out])
+    lines = capsys.readouterr().out.strip().splitlines()
+    assert lines[1] == f"emit_a,1,{out}"
+    assert len(lines) == 2          # emit_b filtered out

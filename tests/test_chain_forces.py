@@ -159,6 +159,84 @@ def test_generic_topology_contraction():
                                atol=2e-3 * _force_scale(g))
 
 
+@pytest.mark.parametrize("term", ["all", "bonds", "angles", "dihedrals"])
+def test_sparse_bonded_matches_autodiff_per_term(term):
+    """The slot-table contraction == -grad of the bonded energy, per
+    class — the same per-term oracle the dense contraction is pinned
+    to, so dense and sparse are pinned to one reference."""
+    sysm, pos = _setup()
+    zero = {"bonds": {"angle_k", "dihedral_k"},
+            "angles": {"bond_k", "dihedral_k"},
+            "dihedrals": {"bond_k", "angle_k"}}.get(term, set())
+    sysm = dataclasses.replace(
+        sysm, **{k: jnp.zeros_like(getattr(sysm, k)) for k in zero})
+    top = chain_ref.chain_topology(sysm)
+    slots = chain_ref.bonded_slots(top)
+    f, e = chain_ref.bonded_forces_sparse(pos, top, slots)
+    g = jax.grad(lambda p: jnp.sum(E.batched_bonded_energy(p, sysm)))(pos)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(-g),
+                               atol=2e-3 * _force_scale(g))
+    np.testing.assert_allclose(
+        np.asarray(e), np.asarray(E.batched_bonded_energy(pos, sysm)),
+        rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("n_atoms", [10, 46, 256, 1024])
+@pytest.mark.parametrize("bias", [False, True])
+def test_sparse_bonded_matches_dense(n_atoms, bias):
+    """Sparse vs dense contraction of the SAME edge gradients, with and
+    without the umbrella bias, up to N=1024: forces to float tolerance
+    (the contraction order differs), energies exactly (the energy never
+    touches the contraction)."""
+    sysm, pos = _setup(n_atoms, n_rep=2)
+    top = chain_ref.chain_topology(sysm)
+    slots = chain_ref.bonded_slots(top)
+    args = _umbrella(pos.shape[0], 2) if bias else (None, None)
+    f_d, e_d = chain_ref.bonded_forces(pos, top, *args)
+    f_s, e_s = chain_ref.bonded_forces_sparse(pos, top, slots, *args)
+    np.testing.assert_allclose(np.asarray(f_s), np.asarray(f_d),
+                               atol=1e-5 * _force_scale(f_d))
+    np.testing.assert_array_equal(np.asarray(e_s), np.asarray(e_d))
+    # the slot tables stay a topology CONSTANT: width independent of N
+    assert slots.idx.shape == (n_atoms, slots.n_slots)
+    assert slots.n_slots <= 15
+
+
+def test_sparse_bonded_permuted_topology():
+    """The host-side incidence inversion is not chain-specific: a
+    permuted atom numbering contracts to the same autodiff gradient."""
+    sysm, _ = _setup(12)
+    perm = np.asarray([3, 7, 0, 9, 4, 11, 1, 8, 5, 10, 2, 6])
+    relabel = lambda a: jnp.asarray(perm[np.asarray(a)], jnp.int32)
+    shuffled = dataclasses.replace(
+        sysm, bonds=relabel(sysm.bonds), angles=relabel(sysm.angles),
+        dihedrals=relabel(sysm.dihedrals),
+        phi_quad=tuple(int(perm[i]) for i in sysm.phi_quad),
+        psi_quad=tuple(int(perm[i]) for i in sysm.psi_quad))
+    top = chain_ref.chain_topology(shuffled)
+    slots = chain_ref.bonded_slots(top)
+    pos = MDEngine(system=shuffled).init_state(jax.random.key(3), 3)["pos"]
+    f, _ = chain_ref.bonded_forces_sparse(pos, top, slots)
+    g = jax.grad(lambda p: jnp.sum(E.batched_bonded_energy(p, shuffled)))(pos)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(-g),
+                               atol=2e-3 * _force_scale(g))
+
+
+def test_ops_sparse_dispatch():
+    """``chain_ops.bonded_forces(sparse=True)`` routes the jnp path
+    through the slot contraction (pack carries the tables) and agrees
+    with the dense dispatch."""
+    sysm, pos = _setup()
+    pack = chain_ops.build_pack(sysm)
+    c, k = _umbrella(pos.shape[0], 2)
+    f_d, e_d = chain_ops.bonded_forces(pos, pack, c, k, use_kernel=False)
+    f_s, e_s = chain_ops.bonded_forces(pos, pack, c, k, use_kernel=False,
+                                       sparse=True)
+    np.testing.assert_allclose(np.asarray(f_s), np.asarray(f_d),
+                               atol=1e-5 * _force_scale(f_d))
+    np.testing.assert_array_equal(np.asarray(e_s), np.asarray(e_d))
+
+
 def test_lj_fluid_analytic_forces_match_autodiff():
     """LJEngine's direct analytic force (the batched propagate path)
     == -grad of the minimum-image LJ energy oracle."""

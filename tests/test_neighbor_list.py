@@ -385,3 +385,107 @@ def test_build_method_keys_on_occupancy_not_atom_count():
     eng = MDEngine(system=chain_molecule(512), nonbonded="sparse",
                    nlist_build="cell")
     assert eng.nlist_build == "cell"
+
+
+# -- capacity heuristics on replica stacks (PR-9 regression) ---------------
+
+
+def test_suggest_k_max_accepts_replica_stack():
+    """An (R, N, 3) stack sizes K_max to the WORST replica: an ensemble
+    whose perturbed members pack tighter than the reference snapshot
+    must not get a list sized to the loosest one."""
+    rng = np.random.default_rng(2)
+    loose = rng.uniform(0.0, 40.0, (64, 3))          # sparse gas
+    tight = loose * 0.25                             # same atoms, packed
+    mask = np.ones((64, 64)) - np.eye(64)
+    k_loose = NB.suggest_k_max(64, loose, mask, R_LIST)
+    k_tight = NB.suggest_k_max(64, tight, mask, R_LIST)
+    k_stack = NB.suggest_k_max(64, np.stack([loose, tight]), mask, R_LIST)
+    assert k_tight > k_loose                          # premise of the bug
+    assert k_stack == k_tight                         # max across replicas
+    # clamp contract unchanged: [8, n-1]
+    assert 8 <= k_stack <= 63
+
+
+def test_suggest_cell_capacity_accepts_replica_stack():
+    """Same contract for the per-cell capacity heuristic: stack input
+    sizes to the peak occupancy across replicas, keeping the [8, N]
+    clamp."""
+    rng = np.random.default_rng(3)
+    loose = rng.uniform(0.0, 60.0, (64, 3))
+    tight = loose * 0.2
+    gd = NB.suggest_grid_dims(loose.max(0) - loose.min(0) + 2 * R_LIST,
+                              R_LIST)
+    c_loose = NB.suggest_cell_capacity(loose, R_LIST, gd)
+    c_tight = NB.suggest_cell_capacity(tight, R_LIST, gd)
+    c_stack = NB.suggest_cell_capacity(np.stack([loose, tight]), R_LIST, gd)
+    assert c_tight > c_loose
+    assert c_stack == c_tight
+    assert 8 <= c_stack <= 64
+    # the explicit memory cap still caps the stack-sized suggestion
+    assert NB.suggest_cell_capacity(np.stack([loose, tight]), R_LIST, gd,
+                                    max_capacity=10) == 10
+
+
+# -- build-time pair-parameter planes (PR-9) -------------------------------
+
+
+def test_pair_planes_bitwise_identical_sweep():
+    """The planes path of the sparse sweep is BITWISE identical to the
+    per-step gather path — forces and both energy accumulators."""
+    sys_, pos = _chain_stack()
+    nl = NB.build_neighbor_list(pos, sys_.nb_mask, R_LIST, 21,
+                                pair_params=(sys_.lj_sigma, sys_.lj_eps,
+                                             sys_.charges))
+    assert nl["pair"].shape == (pos.shape[0], 3, sys_.n_atoms, 21)
+    args = (pos, sys_.lj_sigma, sys_.lj_eps, sys_.charges,
+            nl["idx"], nl["valid"], CUTOFF)
+    gather = nb_ref.nonbonded_sparse(*args)
+    planes = nb_ref.nonbonded_sparse(*args, pair=nl["pair"])
+    for name, a, b in zip(("f_lj", "f_el", "e_lj", "e_el"),
+                          planes, gather):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_pair_planes_engine_bitwise_run():
+    """Full fused runs with and without ``nb_pair_planes`` produce
+    bitwise-identical STATES (not just decisions): the planes drop
+    gathers, not one bit of math)."""
+    cfg = RepExConfig(dimensions=(("temperature", 4),),
+                      md_steps_per_cycle=3, n_cycles=6)
+    outs = {}
+    for planes in (False, True):
+        d = REMDDriver(MDEngine(nonbonded="sparse",
+                                nb_pair_planes=planes), cfg)
+        outs[planes] = d.run_fused(d.init(), chunk_cycles=3)
+    np.testing.assert_array_equal(np.asarray(outs[True].state["pos"]),
+                                  np.asarray(outs[False].state["pos"]))
+    np.testing.assert_array_equal(np.asarray(outs[True].assignment),
+                                  np.asarray(outs[False].assignment))
+    # the planes leaf rides the carry only when enabled
+    assert "pair" in outs[True].state["nlist"]
+    assert "pair" not in outs[False].state["nlist"]
+
+
+def test_pair_planes_follow_rebuild():
+    """After a rebuild the planes are re-derived from the FRESH idx
+    table (stale planes on new indices would be silently wrong
+    physics)."""
+    sys_, pos = _chain_stack()
+    pp = (sys_.lj_sigma, sys_.lj_eps, sys_.charges)
+    nl = NB.build_neighbor_list(pos, sys_.nb_mask, R_LIST, 21,
+                                pair_params=pp)
+    moved = pos + jnp.asarray([5.0, 0.0, 0.0])[None, None, :] * (
+        jnp.arange(pos.shape[1]) % 2)[None, :, None]
+    out = NB.maybe_rebuild(moved, nl, sys_.nb_mask, R_LIST, SKIN, 21,
+                           pair_params=pp, sync=True)
+    assert bool(jnp.all(out["rebuilds"] == 1))
+    np.testing.assert_array_equal(
+        np.asarray(out["pair"]),
+        np.asarray(NB.pair_planes(out["idx"], *pp)))
+
+
+def test_pair_planes_require_sparse():
+    with pytest.raises(ValueError):
+        MDEngine(nb_pair_planes=True)

@@ -24,6 +24,10 @@ from repro.md import MDEngine
 
 PROPAGATE_OP_BUDGET = 150
 FORCE_OP_BUDGET = 80
+# the all-sparse propagate (neighbor-list nonbonded + slot-table bonded
+# + pair planes in the scan carry) measures ~146 ops — the skin-check
+# cond and the list carry cost ~18 ops over the dense path's ~128
+SPARSE_PROPAGATE_OP_BUDGET = 185
 
 
 def _propagate_args(n=8, steps=10):
@@ -57,6 +61,45 @@ def test_analytic_force_fn_op_budget():
                                       state["pos"])
     assert total <= FORCE_OP_BUDGET, (
         f"force fn compiled to {total} ops (> {FORCE_OP_BUDGET}): {census}")
+
+
+def test_sparse_paths_propagate_op_budget():
+    """The linear-in-N propagate paths stay thunk-lean: sparse bonded
+    contraction alone must fit the DENSE budget (it swaps two GEMMs for
+    two gathers — no structural growth), and the all-sparse engine
+    (neighbor list + pair planes + slot-table bonded) stays under its
+    own pinned budget."""
+    ctrl, rngs, n_steps, steps = _propagate_args()
+
+    def count(**kw):
+        eng = MDEngine(**kw)
+        state = eng.init_state(jax.random.key(0), 8)
+        total, census = compiled_op_count(
+            lambda s: eng.propagate(s, ctrl, n_steps, rngs,
+                                    max_steps=steps), state)
+        return total, census
+
+    total, census = count(bonded="sparse")
+    assert total <= PROPAGATE_OP_BUDGET, (
+        f"bonded-sparse propagate compiled to {total} ops "
+        f"(> {PROPAGATE_OP_BUDGET}): {census}")
+    total, census = count(bonded="sparse", nonbonded="sparse")
+    assert total <= SPARSE_PROPAGATE_OP_BUDGET, (
+        f"all-sparse propagate compiled to {total} ops "
+        f"(> {SPARSE_PROPAGATE_OP_BUDGET}): {census}")
+
+
+def test_sparse_bonded_force_fn_op_budget():
+    """The analytic force fn with the slot-table bonded contraction
+    stays under the same budget as the dense contraction."""
+    ctrl, _, _, _ = _propagate_args()
+    eng = MDEngine(bonded="sparse")
+    state = eng.init_state(jax.random.key(0), 8)
+    total, census = compiled_op_count(eng._analytic_force_fn(ctrl),
+                                      state["pos"])
+    assert total <= FORCE_OP_BUDGET, (
+        f"sparse bonded force fn compiled to {total} ops "
+        f"(> {FORCE_OP_BUDGET}): {census}")
 
 
 def test_analytic_path_beats_autodiff_op_count():
