@@ -47,7 +47,8 @@ JSON_OUT = None
 # --json-out whose filter selects more than one of these — they would
 # silently clobber the same path)
 JSON_BENCHES = frozenset({"cycle_fusion", "neighbor_list", "sharded",
-                          "exchange_scaling", "bonded_scaling"})
+                          "exchange_scaling", "bonded_scaling",
+                          "fused_propagate"})
 
 
 def _time(fn, *args, reps=3):
@@ -310,11 +311,14 @@ def cycle_fusion(rows: List[str]):
 
     engines = {"harmonic": HarmonicEngine}
     if not smoke:
-        engines["md_chain_pallas"] = MDEngine           # the default path
-        engines["md_chain_batched"] = functools.partial(
-            MDEngine, force_path="batched")
-        engines["md_chain_vmap"] = functools.partial(MDEngine,
-                                                     batched=False)
+        # one row per force path the engine CLASS declares — derived
+        # from the ``force_paths`` capability, so a new path lands in
+        # this sweep (and the BENCH JSON) without a second edit site
+        from repro.core.engine import engine_capabilities
+        for fp in engine_capabilities(MDEngine())["force_paths"] or ():
+            engines[f"md_chain_{fp}"] = (
+                functools.partial(MDEngine, batched=False) if fp == "vmap"
+                else functools.partial(MDEngine, force_path=fp))
     payload: Dict[str, Dict] = {"md_steps_per_cycle": MD_STEPS,
                                 "n_replicas": n_replicas,
                                 "n_cycles": n_cycles, "engines": {},
@@ -369,6 +373,106 @@ def cycle_fusion(rows: List[str]):
             f"cycle_fusion_{name}_eq1_split,{split['t_cycle_mean'] * 1e6:.0f},"
             + "|".join(f"{t}={eq1[t] * 1e6:.0f}us" for t in sorted(eq1)))
     with open(JSON_OUT or "BENCH_cycle_fusion.json", "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+def fused_propagate(rows: List[str]):
+    """Interleaved A/B: the fused propagate path vs the per-pass
+    analytic (pallas) path, plus their static op census.
+
+    Measures us per propagate call (R=8 replicas, ``MD_STEPS`` steps)
+    with the two jitted programs timed in ALTERNATING rounds and the
+    min taken per path — run-to-run drift on a throttled container
+    exceeds the A/B delta, so back-to-back blocks would mostly measure
+    scheduler weather; interleaving samples both paths under the same
+    weather.  A second cycle-level sweep drives each path through
+    ``REMDDriver.run_fused`` the same way.  The static executable-op
+    census (the quantity tests/test_op_budget.py pins) is recorded
+    alongside so the JSON ties the wall-clock delta to the structural
+    one.  Emits ``BENCH_fused_propagate.json``.
+    ``CYCLE_FUSION_SMOKE=1`` shrinks the rounds for CI smoke runs.
+    """
+    import json
+    import os
+
+    from repro.launch.hlo_analysis import compiled_op_count
+
+    smoke = bool(os.environ.get("CYCLE_FUSION_SMOKE"))
+    n_replicas = 8
+    rounds = 6 if smoke else 30
+    n_cycles = 8 if smoke else 32
+    grid = build_grid(RepExConfig(
+        dimensions=(("temperature", n_replicas),)))
+    ctrl = ctrl_for_assignment(grid, jnp.arange(n_replicas))
+    rngs = jax.random.split(jax.random.key(7), n_replicas)
+    n_steps = jnp.full(n_replicas, MD_STEPS, jnp.int32)
+
+    paths = ("pallas", "fused")
+    prepped = {}
+    ops = {}
+    for fp in paths:
+        eng = MDEngine(force_path=fp)
+        state = eng.init_state(jax.random.key(0), n_replicas)
+        fn = jax.jit(lambda s, e=eng: e.propagate(
+            s, ctrl, n_steps, rngs, max_steps=MD_STEPS))
+        jax.block_until_ready(fn(state))           # compile + warm
+        prepped[fp] = (fn, state)
+        total, census = compiled_op_count(
+            lambda s, e=eng: e.propagate(s, ctrl, n_steps, rngs,
+                                         max_steps=MD_STEPS), state)
+        ops[fp] = total
+
+    best = {fp: float("inf") for fp in paths}
+    for _ in range(rounds):
+        for fp in paths:                           # interleaved rounds
+            fn, state = prepped[fp]
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(state))
+            best[fp] = min(best[fp], time.perf_counter() - t0)
+    for fp in paths:
+        rows.append(f"fused_propagate_{fp},{best[fp] * 1e6:.1f},"
+                    f"ops={ops[fp]};steps={MD_STEPS}")
+    rows.append(f"fused_propagate_speedup,0,"
+                f"fused_vs_pallas={best['pallas'] / best['fused']:.2f}x;"
+                f"op_ratio={ops['pallas'] / ops['fused']:.2f}x")
+
+    # cycle-level A/B through the fused driver scan, same interleaving
+    cfg = RepExConfig(dimensions=(("temperature", n_replicas),),
+                      md_steps_per_cycle=MD_STEPS, n_cycles=n_cycles)
+    cyc = {}
+    for fp in paths:
+        d = REMDDriver(MDEngine(force_path=fp), cfg)
+        e = d.init()
+        d.run_fused(e, n_cycles=n_cycles, chunk_cycles=n_cycles)  # warm
+        cyc[fp] = (d, e)
+    best_cyc = {fp: float("inf") for fp in paths}
+    for _ in range(max(3, rounds // 3)):
+        for fp in paths:
+            d, e = cyc[fp]
+            t0 = time.perf_counter()
+            d.run_fused(e, n_cycles=n_cycles, chunk_cycles=n_cycles)
+            best_cyc[fp] = min(best_cyc[fp], time.perf_counter() - t0)
+    for fp in paths:
+        us = best_cyc[fp] / n_cycles * 1e6
+        rows.append(f"fused_propagate_cycle_{fp},{us:.1f},"
+                    f"us_per_cycle_at_K{n_cycles}")
+    rows.append(
+        f"fused_propagate_cycle_speedup,0,"
+        f"fused_vs_pallas={best_cyc['pallas'] / best_cyc['fused']:.2f}x")
+
+    payload = {
+        "n_replicas": n_replicas, "md_steps": MD_STEPS,
+        "interleaved_rounds": rounds,
+        "propagate_us": {fp: best[fp] * 1e6 for fp in paths},
+        "propagate_speedup_fused_vs_pallas": best["pallas"] / best["fused"],
+        "op_census_total": ops,
+        "cycle_us_per_cycle": {fp: best_cyc[fp] / n_cycles * 1e6
+                               for fp in paths},
+        "cycle_speedup_fused_vs_pallas":
+            best_cyc["pallas"] / best_cyc["fused"],
+        "n_cycles": n_cycles,
+    }
+    with open(JSON_OUT or "BENCH_fused_propagate.json", "w") as f:
         json.dump(payload, f, indent=2)
 
 
@@ -831,4 +935,5 @@ ALL = [fig5_overheads, fig6_1d_weak_scaling, fig7_parallel_efficiency,
        fig8_engine_swap, fig9_mremd_weak, fig10_mremd_strong,
        fig12_multicore_replicas, fig13_async_utilization,
        table1_capabilities, xmat_exchange_scaling, cycle_fusion,
-       neighbor_list, bonded_scaling, sharded, exchange_scaling]
+       fused_propagate, neighbor_list, bonded_scaling, sharded,
+       exchange_scaling]

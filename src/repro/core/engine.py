@@ -92,8 +92,14 @@ class SimulationEngine(Protocol):
 #   force_path: str
 #       Which force implementation the engine's propagate uses
 #       ("pallas" analytic kernels / "batched" autodiff / "vmap"
-#       per-replica oracle for the stock MD engine).  Informational:
-#       surfaced by ``engine_capabilities`` for logs and benchmarks.
+#       per-replica oracle / "fused" force+update single pass for the
+#       stock MD engine).  Informational: surfaced by
+#       ``engine_capabilities`` for logs and benchmarks.
+#
+#   force_paths: tuple[str, ...]
+#       The full menu of force paths the engine CLASS supports
+#       (``MDEngine.FORCE_PATHS``); benchmark sweeps enumerate their
+#       per-path rows from this capability.
 
 
 # The neighbor-list health extension (``nb_stats``) reports these keys,
@@ -135,6 +141,12 @@ def engine_capabilities(engine) -> Dict[str, Any]:
         # legitimate declaration of "reads none" and is preserved
         "ctrl_keys": tuple(keys) if keys is not None else None,
         "force_path": getattr(engine, "force_path", None),
+        # the full menu of propagate implementations the engine can be
+        # constructed with (None = engine has a single fixed path);
+        # sweeps derive their per-path rows from this instead of
+        # hardcoding the list
+        "force_paths": (tuple(paths) if (paths := getattr(
+            engine, "force_paths", None)) is not None else None),
         "batched": bool(getattr(engine, "batched", False)),
         # "dense" / "sparse" for the MD engine's nonbonded pass; None =
         # engine has no nonbonded selection.  Engines with nb_stats

@@ -68,18 +68,22 @@ def _rows3(fx, fy, fz):
     return jnp.concatenate([fx, fy, fz, z, z, z, z, z], axis=0)
 
 
-def _chain_forces_kernel(c_ref, p_ref, bnd_ref, ang_ref, qud_ref, bias_ref,
-                         f_ref, e_ref, *, bp, ap, qp, bias):
-    c = c_ref[0]                                   # (8, Np)
-    p = p_ref[...]                                 # (Np, Tp)
-    g = jax.lax.dot_general(c, p, _DN, preferred_element_type=jnp.float32)
+def bonded_scatter_rows(g, bnd, ang, qud, bias_par, *, bp, ap, qp, bias):
+    """The bonded gradient body on gathered term slots: (8, Tp) gathered
+    coordinates -> ((8, Tp) scatter rows, total bonded energy).
 
+    Shared between ``_chain_forces_kernel`` (standalone bonded pass) and
+    the fused-propagate kernel (``kernels.fused_propagate``), so the
+    hand-derived gradient math exists in exactly one kernel-layout form.
+    ``bnd``/``ang``/``qud`` are the (8, ·) parameter arrays; ``bias_par``
+    is this replica's (1, 8) umbrella row.
+    """
     # -- bonds ------------------------------------------------------------
     xi, yi, zi = _xyz(g, 0, bp)
     xj, yj, zj = _xyz(g, bp, bp)
     dx, dy, dz = xi - xj + 1e-12, yi - yj + 1e-12, zi - zj + 1e-12
     r = jnp.sqrt(dx * dx + dy * dy + dz * dz)
-    r0, kb = bnd_ref[0:1, :], bnd_ref[1:2, :]
+    r0, kb = bnd[0:1, :], bnd[1:2, :]
     e_bond = jnp.sum(kb * (r - r0) ** 2)
     cb = 2.0 * kb * (r - r0) / r                   # dE/dd coefficient
     s_bi = _rows3(-cb * dx, -cb * dy, -cb * dz)    # force = -grad
@@ -99,7 +103,7 @@ def _chain_forces_kernel(c_ref, p_ref, bnd_ref, ang_ref, qud_ref, bias_ref,
     cosv = dot / den
     cc = jnp.clip(cosv, -1 + 1e-6, 1 - 1e-6)
     theta = jnp.arccos(cc)
-    t0, ka = ang_ref[0:1, :], ang_ref[1:2, :]
+    t0, ka = ang[0:1, :], ang[1:2, :]
     e_angle = jnp.sum(ka * (theta - t0) ** 2)
     interior = ((cosv > -1 + 1e-6) & (cosv < 1 - 1e-6)).astype(cosv.dtype)
     g_c = (2.0 * ka * (theta - t0)
@@ -132,18 +136,18 @@ def _chain_forces_kernel(c_ref, p_ref, bnd_ref, ang_ref, qud_ref, bias_ref,
     m1x, m1y, m1z = _cross(n1x, n1y, n1z, b1x * ib, b1y * ib, b1z * ib)
     x = _dot3(n1x, n1y, n1z, n2x, n2y, n2z)
     y = _dot3(m1x, m1y, m1z, n2x, n2y, n2z)
-    ang = jnp.arctan2(y, x)
-    nq, kq = qud_ref[0:1, :], qud_ref[1:2, :]
-    ph = qud_ref[2:3, :]
-    e_dih = jnp.sum(kq * (1.0 + jnp.cos(nq * ang - ph)))
-    torque = -kq * nq * jnp.sin(nq * ang - ph)
+    dihed = jnp.arctan2(y, x)
+    nq, kq = qud[0:1, :], qud[1:2, :]
+    ph = qud[2:3, :]
+    e_dih = jnp.sum(kq * (1.0 + jnp.cos(nq * dihed - ph)))
+    torque = -kq * nq * jnp.sin(nq * dihed - ph)
     if bias:
-        isphi, ispsi = qud_ref[3:4, :], qud_ref[4:5, :]
-        deg = ang * DEG
-        torque += isphi * (2.0 * bias_ref[0, 2]
-                           * _wrap_deg(deg - bias_ref[0, 0]) * DEG)
-        torque += ispsi * (2.0 * bias_ref[0, 3]
-                           * _wrap_deg(deg - bias_ref[0, 1]) * DEG)
+        isphi, ispsi = qud[3:4, :], qud[4:5, :]
+        deg = dihed * DEG
+        torque += isphi * (2.0 * bias_par[0, 2]
+                           * _wrap_deg(deg - bias_par[0, 0]) * DEG)
+        torque += ispsi * (2.0 * bias_par[0, 3]
+                           * _wrap_deg(deg - bias_par[0, 1]) * DEG)
     inv1 = 1.0 / (_dot3(n1x, n1y, n1z, n1x, n1y, n1z) + 1e-12)
     inv2 = 1.0 / (_dot3(n2x, n2y, n2z, n2x, n2y, n2z) + 1e-12)
     invb = 1.0 / (nb1 + 1e-12)
@@ -168,9 +172,19 @@ def _chain_forces_kernel(c_ref, p_ref, bnd_ref, ang_ref, qud_ref, bias_ref,
 
     s = jnp.concatenate([s_bi, s_bj, s_aa, s_ab, s_ac,
                          s_q0, s_q1, s_q2, s_q3], axis=1)   # (8, Tp)
+    return s, e_bond + e_angle + e_dih
+
+
+def _chain_forces_kernel(c_ref, p_ref, bnd_ref, ang_ref, qud_ref, bias_ref,
+                         f_ref, e_ref, *, bp, ap, qp, bias):
+    c = c_ref[0]                                   # (8, Np)
+    p = p_ref[...]                                 # (Np, Tp)
+    g = jax.lax.dot_general(c, p, _DN, preferred_element_type=jnp.float32)
+    s, e = bonded_scatter_rows(g, bnd_ref[...], ang_ref[...], qud_ref[...],
+                               bias_ref[...], bp=bp, ap=ap, qp=qp, bias=bias)
     f_ref[...] = jax.lax.dot_general(
         s, p, _DNT, preferred_element_type=jnp.float32)[None]
-    e_ref[0, 0] = e_bond + e_angle + e_dih
+    e_ref[0, 0] = e
 
 
 def chain_forces_kernel_batched(coords, gmat, bond_par, ang_par, quad_par,

@@ -1,0 +1,27 @@
+"""Fused BAOAB-in-kernel propagate (``MDEngine(force_path="fused")``).
+
+One MD iteration = ONE pass: the bonded analytic gradients
+(``kernels.chain_forces``), the nonbonded LJ+elec sweep
+(``kernels.lj_forces``) and the masked B-A-O-A-B update emitted
+together — a single replica-grid Pallas kernel per iteration on TPU
+(``kernel.py``), a single jitted fused body on the jnp path
+(``integrators.propagate_replica_major_fused``).  This attacks the
+per-iteration GEMM/dispatch floor the ROADMAP PR-3 analysis names as
+the last open T_MD lever.
+
+Dispatch rules (``ops.kernel_supported``): the fused KERNEL covers the
+dense all-pairs nonbonded sweep; ``nonbonded="sparse"`` runs keep their
+per-pass kernels (or jnp sweeps) inside the fused jnp loop so the
+neighbor-list aux carry and ``nb_pair_planes`` survive unchanged — the
+same precedent as the planes themselves (the kernel gathers parameters
+from its packed coordinate rows natively).
+
+Oracle chain: vmap (bitwise-decision oracle) -> batched (autodiff
+tolerance oracle) -> pallas (analytic per-pass) -> fused (this
+package); interpret mode runs the TPU kernel body on CPU as the
+correctness harness.  The conformance matrix
+(tests/test_conformance_matrix.py) pins exchange decisions bitwise
+across all four paths.
+"""
+from repro.kernels.fused_propagate.ops import (fused_propagate,  # noqa: F401
+                                               kernel_supported)

@@ -1,0 +1,124 @@
+"""The fused BAOAB Pallas kernel: force + integrator update, one launch.
+
+One program per replica (grid ``(R,)``), packed (8, Np) layout shared
+with the force kernels.  Each launch performs ONE fused iteration:
+
+    g  = C @ P                       bonded gather      (MXU)
+    s  = bonded_scatter_rows(g)      bonded gradients   (VPU)
+    fb = s @ P^T                     bonded scatter     (MXU)
+    nb = nonbonded_pair_rows(C, C)   LJ + elec sweep    (VPU)
+    f  = fb + nb_lj + salt * nb_el
+    B-A-O-A-B masked update on coordinate/velocity rows 0..2
+
+The gradient bodies are the SAME functions the standalone kernels run
+(``chain_forces.kernel.bonded_scatter_rows``,
+``lj_forces.kernel.nonbonded_pair_rows``) — the fusion changes launch
+structure, never math.  The nonbonded sweep runs on the full (Np, Np)
+tile: chain systems fit one lane block, so the flash-attention-style
+j-streaming of the standalone kernel buys nothing here, and dropping
+the tile loop is what lets force + update share one program.
+
+Per-replica step scalars ride an (R, 8) input ``step_par``:
+row 0 = trail mask (this iteration applies step i-1's trailing half-B),
+row 1 = lead mask (it applies step i's leading half-B + A-O-A),
+row 2 = salt scale.  The pre-SCALED noise block (noise_scale * xi, the
+O-step increment) streams in packed rows 0..2 — drawing stays outside
+so the kernel is RNG-agnostic.  ``mass_rows`` rows 0..2 carry the
+masses (padding lanes 1.0, so padded-atom divides stay finite).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.chain_forces.kernel import (_DN, _DNT,
+                                               bonded_scatter_rows)
+from repro.kernels.lj_forces.kernel import nonbonded_pair_rows
+
+
+def _fused_baoab_kernel(c_ref, v_ref, nz_ref, st_ref, bias_ref, p_ref,
+                        bnd_ref, ang_ref, qud_ref, m_ref, mass_ref,
+                        nc_ref, nv_ref, *, bp, ap, qp, bias, coulomb,
+                        c1, half_kick, half_dt):
+    c = c_ref[0]                                   # (8, Np) coords+params
+    v = v_ref[0]                                   # (8, Np) velocities
+    p = p_ref[...]                                 # (Np, Tp) one-hot gather
+
+    # -- force: bonded (two MXU matmuls around the VPU gradient body) --
+    g = jax.lax.dot_general(c, p, _DN, preferred_element_type=jnp.float32)
+    s, _e = bonded_scatter_rows(g, bnd_ref[...], ang_ref[...], qud_ref[...],
+                                bias_ref[...], bp=bp, ap=ap, qp=qp,
+                                bias=bias)
+    fb = jax.lax.dot_general(s, p, _DNT, preferred_element_type=jnp.float32)
+
+    # -- force: nonbonded, full (Np, Np) tile ---------------------------
+    rows, _elj, _eel = nonbonded_pair_rows(c, c, m_ref[...],
+                                           coulomb=coulomb)
+
+    st = st_ref[...]                               # (1, 8) step scalars
+    trail, lead, salt = st[0, 0], st[0, 1], st[0, 2]
+    f = fb[0:3] + rows[0:3] + salt * rows[3:6]     # (3, Np)
+
+    # -- masked force-sharing B-A-O-A-B on rows 0..2 --------------------
+    kick = half_kick * f / mass_ref[0:3, :]
+    pos, vel = c[0:3], v[0:3]
+    vel = jnp.where(trail > 0.5, vel + kick, vel)  # trailing B of i-1
+    nvel = vel + kick                              # leading B of step i
+    npos = pos + half_dt * nvel                    # A
+    nvel = c1 * nvel + nz_ref[0, 0:3]              # O (pre-scaled noise)
+    npos = npos + half_dt * nvel                   # A
+    alive = lead > 0.5
+    nc_ref[...] = jnp.concatenate(
+        [jnp.where(alive, npos, pos), c[3:8]], axis=0)[None]
+    nv_ref[...] = jnp.concatenate(
+        [jnp.where(alive, nvel, vel), v[3:8]], axis=0)[None]
+
+
+def fused_baoab_kernel_batched(coords, vels, noise, step_par, bias_par,
+                               gmat, bond_par, ang_par, quad_par, nb_mask,
+                               mass_rows, *, bp: int, ap: int, qp: int,
+                               bias: bool, coulomb: float, c1: float,
+                               half_kick: float, half_dt: float,
+                               interpret: bool = False):
+    """One fused BAOAB iteration over the replica stack, one launch.
+
+    coords/vels/noise (R, 8, Np) packed; step_par/bias_par (R, 8);
+    gmat (Np, Tp); bond/ang/quad (8, ·); nb_mask (Np, Np); mass_rows
+    (8, Np).  Returns (new coords, new vels), both (R, 8, Np) with
+    rows 3..7 passed through unchanged.
+    """
+    r, _, n_pad = coords.shape
+    tp = gmat.shape[1]
+    kern = functools.partial(_fused_baoab_kernel, bp=bp, ap=ap, qp=qp,
+                             bias=bias, coulomb=coulomb, c1=c1,
+                             half_kick=half_kick, half_dt=half_dt)
+    return pl.pallas_call(
+        kern,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, 8, n_pad), lambda q: (q, 0, 0)),
+            pl.BlockSpec((1, 8, n_pad), lambda q: (q, 0, 0)),
+            pl.BlockSpec((1, 8, n_pad), lambda q: (q, 0, 0)),
+            pl.BlockSpec((1, 8), lambda q: (q, 0)),
+            pl.BlockSpec((1, 8), lambda q: (q, 0)),
+            pl.BlockSpec((n_pad, tp), lambda q: (0, 0)),
+            pl.BlockSpec((8, bp), lambda q: (0, 0)),
+            pl.BlockSpec((8, ap), lambda q: (0, 0)),
+            pl.BlockSpec((8, qp), lambda q: (0, 0)),
+            pl.BlockSpec((n_pad, n_pad), lambda q: (0, 0)),
+            pl.BlockSpec((8, n_pad), lambda q: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 8, n_pad), lambda q: (q, 0, 0)),
+            pl.BlockSpec((1, 8, n_pad), lambda q: (q, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, 8, n_pad), jnp.float32),
+            jax.ShapeDtypeStruct((r, 8, n_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(coords, vels, noise, step_par, bias_par, gmat, bond_par, ang_par,
+      quad_par, nb_mask, mass_rows)

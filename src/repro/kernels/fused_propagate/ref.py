@@ -1,0 +1,44 @@
+"""jnp oracle for ONE fused BAOAB iteration.
+
+Composes the existing reference math — ``chain_forces.ref`` bonded
+gradients, ``lj_forces.ref`` nonbonded force, and the shared
+``integrators.baoab_fused_iteration`` update — into the exact
+(force eval, masked update) pair every fused-path iteration performs.
+The hypothesis property tests pin the engine's fused loop body and the
+Pallas fused kernel (interpret mode) against this function, so the
+fused pass can never drift from the per-pass reference physics.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.chain_forces import ref as chain_ref
+from repro.kernels.lj_forces import ref as nb_ref
+from repro.md import integrators as I
+
+
+def fused_iteration_ref(i, pos, vel, noise_i, system, ctrl, n_steps,
+                        max_steps: int, dt: float, gamma: float, top=None):
+    """One fused iteration on the replica stack: evaluate the full
+    analytic force at ``pos`` and apply the masked force-sharing BAOAB
+    update with iteration index ``i`` and this iteration's noise block.
+
+    ``ctrl`` rows: ``temperature`` (required), optional
+    ``umbrella_center``/``umbrella_k``/``salt`` exactly as the engine
+    consumes them.  ``top`` (a ``ChainTopology``) may be passed to skip
+    re-deriving it from the system.  Returns (pos, vel).
+    """
+    top = chain_ref.chain_topology(system) if top is None else top
+    u_c = ctrl.get("umbrella_center")
+    u_k = ctrl.get("umbrella_k")
+    salt = ctrl.get("salt")
+    salt_scale = None if salt is None else 1.0 - 0.5 * salt
+    f, _ = chain_ref.bonded_forces(pos, top, u_c, u_k)
+    f = f + nb_ref.nonbonded_force(pos, system.lj_sigma, system.lj_eps,
+                                   system.charges, system.nb_mask,
+                                   salt_scale)
+    c1, noise_scale = I.baoab_scales(system.masses, ctrl["temperature"],
+                                     dt, gamma)
+    return I.baoab_fused_iteration(i, pos, vel, f, noise_i, c1, noise_scale,
+                                   system.masses, jnp.asarray(n_steps),
+                                   max_steps, dt, 0.0)

@@ -146,6 +146,38 @@ def lj_forces_kernel_batched(coords, *, sigma: float, eps: float,
 # energy-forward + force-backward passes of the autodiff path.
 
 
+def nonbonded_pair_rows(ci, cj, mask, *, coulomb):
+    """The chain nonbonded tile body on packed (8, ·) coordinate blocks:
+    one (BI, BJ) sweep -> ((8, BI) force rows [0..2 LJ, 3..5 elec],
+    e_lj, e_el).  Shared between ``_nonbonded_kernel_batched`` (tiled
+    standalone pass) and the fused-propagate kernel
+    (``kernels.fused_propagate``), which runs it on the full (Np, Np)
+    tile — ONE pair-math body for both launch shapes."""
+    xi, yi, zi = ci[0], ci[1], ci[2]
+    xj, yj, zj = cj[0], cj[1], cj[2]
+    dx = xi[:, None] - xj[None, :]
+    dy = yi[:, None] - yj[None, :]
+    dz = zi[:, None] - zj[None, :]
+    # masked pairs (diagonal, exclusions, padding) never see r2 -> 0
+    r2 = dx * dx + dy * dy + dz * dz + (1.0 - mask)
+    sig = 0.5 * (ci[4][:, None] + cj[4][None, :])
+    eps = ci[5][:, None] * cj[5][None, :]          # rows carry sqrt(eps)
+    qq = ci[6][:, None] * cj[6][None, :]
+    s6 = (sig * sig / r2) ** 3
+    r = jnp.sqrt(r2)
+    e_lj = 0.5 * jnp.sum(4.0 * eps * (s6 * s6 - s6) * mask)
+    e_el = 0.5 * jnp.sum(coulomb * qq / r * mask)
+    c_lj = 24.0 * eps * (2.0 * s6 * s6 - s6) / r2 * mask
+    c_el = coulomb * qq / (r2 * r) * mask
+    zero = jnp.zeros_like(xi)
+    rows = jnp.stack(
+        [jnp.sum(c_lj * dx, axis=1), jnp.sum(c_lj * dy, axis=1),
+         jnp.sum(c_lj * dz, axis=1), jnp.sum(c_el * dx, axis=1),
+         jnp.sum(c_el * dy, axis=1), jnp.sum(c_el * dz, axis=1),
+         zero, zero])
+    return rows, e_lj, e_el
+
+
 def _nonbonded_kernel_batched(ci_ref, cj_ref, m_ref, f_ref, elj_ref,
                               eel_ref, *, coulomb):
     ii = pl.program_id(1)
@@ -160,30 +192,11 @@ def _nonbonded_kernel_batched(ci_ref, cj_ref, m_ref, f_ref, elj_ref,
         elj_ref[...] = jnp.zeros_like(elj_ref)
         eel_ref[...] = jnp.zeros_like(eel_ref)
 
-    ci, cj = ci_ref[0], cj_ref[0]
-    xi, yi, zi = ci[0], ci[1], ci[2]
-    xj, yj, zj = cj[0], cj[1], cj[2]
-    dx = xi[:, None] - xj[None, :]
-    dy = yi[:, None] - yj[None, :]
-    dz = zi[:, None] - zj[None, :]
-    mask = m_ref[...]
-    # masked pairs (diagonal, exclusions, padding) never see r2 -> 0
-    r2 = dx * dx + dy * dy + dz * dz + (1.0 - mask)
-    sig = 0.5 * (ci[4][:, None] + cj[4][None, :])
-    eps = ci[5][:, None] * cj[5][None, :]          # rows carry sqrt(eps)
-    qq = ci[6][:, None] * cj[6][None, :]
-    s6 = (sig * sig / r2) ** 3
-    r = jnp.sqrt(r2)
-    elj_ref[0, 0] += 0.5 * jnp.sum(4.0 * eps * (s6 * s6 - s6) * mask)
-    eel_ref[0, 0] += 0.5 * jnp.sum(coulomb * qq / r * mask)
-    c_lj = 24.0 * eps * (2.0 * s6 * s6 - s6) / r2 * mask
-    c_el = coulomb * qq / (r2 * r) * mask
-    zero = jnp.zeros_like(xi)
-    f_ref[...] += jnp.stack(
-        [jnp.sum(c_lj * dx, axis=1), jnp.sum(c_lj * dy, axis=1),
-         jnp.sum(c_lj * dz, axis=1), jnp.sum(c_el * dx, axis=1),
-         jnp.sum(c_el * dy, axis=1), jnp.sum(c_el * dz, axis=1),
-         zero, zero])[None]
+    rows, e_lj, e_el = nonbonded_pair_rows(ci_ref[0], cj_ref[0], m_ref[...],
+                                           coulomb=coulomb)
+    elj_ref[0, 0] += e_lj
+    eel_ref[0, 0] += e_el
+    f_ref[...] += rows[None]
 
 
 _DN = (((1,), (0,)), ((), ()))     # contract last dim of lhs w/ first of rhs

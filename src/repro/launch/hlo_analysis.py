@@ -301,6 +301,19 @@ def compiled_op_count(fn, *args) -> Tuple[int, Dict[str, int]]:
     return sum(census.values()), census
 
 
+def op_budget_check(fn, *args, budget: int
+                    ) -> Tuple[bool, int, Dict[str, int]]:
+    """Compile ``fn(*args)`` and compare its executable-op total to a
+    pinned ``budget``: returns ``(within_budget, total, census)``.
+
+    THE one budget-comparison primitive — the op-budget regression
+    tests (tests/test_op_budget.py) and the fused-propagate benchmark's
+    JSON census both route through the same counting semantics, so
+    "under budget" means the same thing in CI and in a recorded sweep."""
+    total, census = compiled_op_count(fn, *args)
+    return total <= budget, total, census
+
+
 # ---------------------------------------------------------------------------
 # Collective census (what crosses devices in a sharded program)
 # ---------------------------------------------------------------------------

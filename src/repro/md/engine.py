@@ -31,6 +31,11 @@
   "vmap" — the per-replica reference oracle: ``jax.vmap`` over
       scalar-sized single-replica programs (== ``batched=False``).  The
       bitwise-exchange-decision oracle.
+  "fused" — one lean pass per BAOAB iteration: force evaluation and
+      the masked B-A-O-A-B update share a single body (a replica-grid
+      Pallas kernel per iteration on TPU for the dense sweep, the
+      jitted fused jnp loop otherwise — ``kernels.fused_propagate``).
+      Same analytic math, same noise stream, fewest ops/launches.
 
 ``batched`` still selects the energy/feature layout (replica-major
 stacked gathers vs vmap-of-scalar programs); ``batched=False`` forces
@@ -64,7 +69,7 @@ from repro.md import neighbors as NB
 from repro.md.system import (MolecularSystem, base_positions,
                              chain_molecule, initial_positions)
 
-FORCE_PATHS = ("pallas", "batched", "vmap")
+FORCE_PATHS = ("pallas", "batched", "vmap", "fused")
 NONBONDED_PATHS = ("dense", "sparse")
 BONDED_PATHS = ("dense", "sparse")
 
@@ -101,6 +106,11 @@ def _bond_overstretch(pos: jax.Array, bonds: jax.Array, r0: jax.Array,
 
 
 class MDEngine:
+    # every propagate implementation this engine can select — surfaced
+    # by ``engine_capabilities`` so sweeps (benchmarks/run.py
+    # cycle_fusion) enumerate paths without a hardcoded second list
+    force_paths = FORCE_PATHS
+
     def __init__(self, system: Optional[MolecularSystem] = None,
                  dt: float = 5e-4, gamma: float = 5.0,
                  init_temperature: float = 300.0, batched: bool = True,
@@ -115,9 +125,10 @@ class MDEngine:
                  max_energy: Optional[float] = None,
                  max_bond_stretch: Optional[float] = None):
         """``force_path``: "pallas" (analytic, default), "batched"
-        (autodiff of the replica-major potential) or "vmap" (per-replica
-        oracle).  ``batched=False`` implies "vmap" — requesting any
-        other path with ``batched=False`` is a conflict and raises.
+        (autodiff of the replica-major potential), "vmap" (per-replica
+        oracle) or "fused" (analytic force + BAOAB update in one pass
+        per iteration).  ``batched=False`` implies "vmap" — requesting
+        any other path with ``batched=False`` is a conflict and raises.
         ``use_force_kernels`` forces the Pallas kernels on/off for the
         analytic path (default: on only on TPU backends; off-TPU the
         analytic jnp oracle runs).
@@ -194,14 +205,14 @@ class MDEngine:
         if nonbonded not in NONBONDED_PATHS:
             raise ValueError(f"nonbonded must be one of {NONBONDED_PATHS}, "
                              f"got {nonbonded!r}")
-        if nonbonded == "sparse" and force_path != "pallas":
+        if nonbonded == "sparse" and force_path not in ("pallas", "fused"):
             raise ValueError(
                 f"nonbonded='sparse' is an analytic-force feature; it "
                 f"cannot run force_path={force_path!r}")
         if bonded not in BONDED_PATHS:
             raise ValueError(f"bonded must be one of {BONDED_PATHS}, "
                              f"got {bonded!r}")
-        if bonded == "sparse" and force_path != "pallas":
+        if bonded == "sparse" and force_path not in ("pallas", "fused"):
             raise ValueError(
                 f"bonded='sparse' is an analytic-force feature; it "
                 f"cannot run force_path={force_path!r}")
@@ -222,7 +233,7 @@ class MDEngine:
         self._use_kernel = (default_use_kernel() if use_force_kernels is None
                             else use_force_kernels)
         self._pack = (chain_ops.build_pack(self.system)
-                      if force_path == "pallas" else None)
+                      if force_path in ("pallas", "fused") else None)
         if nonbonded == "sparse":
             self.cutoff = float(cutoff)
             self.skin = float(skin)
@@ -319,6 +330,9 @@ class MDEngine:
         if self.force_path == "vmap":
             return self._propagate_vmap(state, ctrl, n_steps, rngs,
                                         max_steps)
+        if self.force_path == "fused":
+            return self._propagate_fused(state, ctrl, n_steps, rngs,
+                                         max_steps)
         sys = self.system
         if self.nonbonded == "sparse":
             return self._propagate_sparse(state, ctrl, n_steps, rngs,
@@ -335,13 +349,13 @@ class MDEngine:
                                          ctrl["temperature"], n_steps, rngs,
                                          max_steps, self.dt, self.gamma)
 
-    def _propagate_sparse(self, state, ctrl, n_steps, rngs,
-                          max_steps: int):
-        """The sparse MD loop: every iteration runs the skin check (a
-        conditional on-device rebuild) and then ONE O(N * k_max) force
-        pass; the neighbor list rides the loop carry and comes back in
-        the returned state, so the fused cycle scan threads it across
-        cycles with zero host round-trips."""
+    def _sparse_force_aux(self, ctrl):
+        """The sparse force field with its neighbor-list aux carry:
+        every evaluation runs the skin check (a conditional on-device
+        rebuild) and then ONE O(N * k_max) force pass.  Shared by the
+        per-pass sparse loop and the fused path, so both thread the
+        identical physics + list maintenance through their iteration
+        bodies."""
         sys = self.system
         salt = ctrl.get("salt")
         salt_scale = None if salt is None else 1.0 - 0.5 * salt
@@ -359,12 +373,54 @@ class MDEngine:
                 use_kernel=self._use_kernel, pair=nlist.get("pair"))
             return f, nlist
 
+        return force_aux
+
+    def _propagate_sparse(self, state, ctrl, n_steps, rngs,
+                          max_steps: int):
+        """The sparse MD loop: the neighbor list rides the loop carry
+        and comes back in the returned state, so the fused cycle scan
+        threads it across cycles with zero host round-trips."""
         md_state = {"pos": state["pos"], "vel": state["vel"]}
         out, nlist = I.propagate_replica_major_aux(
-            md_state, force_aux, state["nlist"], sys.masses,
+            md_state, self._sparse_force_aux(ctrl), state["nlist"],
+            self.system.masses, ctrl["temperature"], n_steps, rngs,
+            max_steps, self.dt, self.gamma)
+        out["nlist"] = nlist
+        return out
+
+    def _propagate_fused(self, state, ctrl, n_steps, rngs,
+                         max_steps: int):
+        """``force_path="fused"``: one lean pass per BAOAB iteration.
+
+        Dispatch rules (docs/ENGINES.md §Force paths): on TPU with the
+        dense nonbonded sweep, each iteration is ONE replica-grid
+        Pallas launch (``kernels.fused_propagate``).  Off-TPU, and for
+        ``nonbonded="sparse"`` (whose neighbor-list aux carry and
+        ``nb_pair_planes`` ride the loop), the jitted fused jnp body
+        runs — hoisted scales, in-loop unrolled-threefry noise, the
+        shared ``baoab_fused_iteration`` update.  Both keep every force
+        evaluation inside the loop body, so the bitwise-across-chunk-
+        sizes guarantee carries over unchanged."""
+        sys = self.system
+        if self.nonbonded == "sparse":
+            md_state = {"pos": state["pos"], "vel": state["vel"]}
+            out, nlist = I.propagate_replica_major_fused(
+                md_state, self._sparse_force_aux(ctrl), state["nlist"],
+                sys.masses, ctrl["temperature"], n_steps, rngs,
+                max_steps, self.dt, self.gamma)
+            out["nlist"] = nlist
+            return out
+        if self._use_kernel:
+            from repro.kernels.fused_propagate import ops as fused_ops
+            return fused_ops.fused_propagate(
+                state, self._pack, sys, ctrl, n_steps, rngs, max_steps,
+                self.dt, self.gamma)
+        force_fn = self._analytic_force_fn(ctrl)
+        out, _ = I.propagate_replica_major_fused(
+            {"pos": state["pos"], "vel": state["vel"]},
+            lambda pos, aux: (force_fn(pos), aux), (), sys.masses,
             ctrl["temperature"], n_steps, rngs, max_steps, self.dt,
             self.gamma)
-        out["nlist"] = nlist
         return out
 
     def _analytic_force_fn(self, ctrl):

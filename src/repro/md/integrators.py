@@ -43,6 +43,49 @@ def baoab_step(pos, vel, rng, force_fn: Callable, masses, temperature,
     return pos, vel
 
 
+def baoab_scales(masses, temperature, dt: float, gamma: float):
+    """The loop-invariant BAOAB coefficients: the O-step decay ``c1 =
+    exp(-gamma dt)`` and the (R, N, 1) thermal noise scale
+    ``sqrt(1 - c1^2) * sigma(T, m)``.  Computed with the exact
+    expressions (and association) the historical in-loop form used, so
+    hoisting them out of a propagate loop body — the fused path — leaves
+    every downstream float bit unchanged."""
+    c1 = jnp.exp(-gamma * dt)
+    sigma = jnp.sqrt(AKMA * KB * temperature[:, None]
+                     / masses[None, :])[..., None]              # (R, N, 1)
+    return c1, jnp.sqrt(1 - c1 * c1) * sigma
+
+
+def baoab_fused_iteration(i, pos, vel, f, noise_i, c1, noise_scale, masses,
+                          n_steps, max_steps: int, dt: float, box: float):
+    """The fused-iteration contract: ONE masked force-sharing BAOAB
+    update given this iteration's force, noise block and pre-hoisted
+    scales — the exact update graph every propagate path shares.
+
+    ``_baoab_apply`` (the pallas/batched loop body) delegates here after
+    computing the scales in-body; the fused path hoists them via
+    :func:`baoab_scales` and the TPU fused kernel re-emits these same
+    formulas in its packed row layout.  Keeping the arithmetic in one
+    function is what lets the conformance matrix pin single-step bitwise
+    equality across paths.  Returns (pos, vel).
+    """
+    m = masses[None, :, None]
+    kick = 0.5 * dt * AKMA * f / m
+    # trailing half-B of step i-1: existed and was active iff i-1 < n
+    trail = ((i >= 1) & (i <= n_steps))[:, None, None]
+    vel = jnp.where(trail, vel + kick, vel)
+    # step i: leading half-B, A, O, A (its trailing B is the NEXT
+    # iteration's force)
+    lead = ((i < n_steps) & (i < max_steps))[:, None, None]
+    nvel = vel + kick                                        # B
+    npos = pos + 0.5 * dt * nvel                             # A
+    nvel = c1 * nvel + noise_scale * noise_i                 # O
+    npos = npos + 0.5 * dt * nvel                            # A
+    if box > 0:
+        npos = jnp.mod(npos, box)
+    return jnp.where(lead, npos, pos), jnp.where(lead, nvel, vel)
+
+
 def _baoab_apply(i, pos, vel, f, noise_i, masses, temperature, n_steps,
                  max_steps: int, dt: float, gamma: float, box: float):
     """One force-sharing BAOAB update over the whole replica stack,
@@ -75,24 +118,9 @@ def _baoab_apply(i, pos, vel, f, noise_i, masses, temperature, n_steps,
     step (the minimum-image force is wrap-invariant up to fp rounding).
     Returns (pos, vel).
     """
-    m = masses[None, :, None]
-    kick = 0.5 * dt * AKMA * f / m
-    # trailing half-B of step i-1: existed and was active iff i-1 < n
-    trail = ((i >= 1) & (i <= n_steps))[:, None, None]
-    vel = jnp.where(trail, vel + kick, vel)
-    # step i: leading half-B, A, O, A (its trailing B is the NEXT
-    # iteration's force)
-    lead = ((i < n_steps) & (i < max_steps))[:, None, None]
-    c1 = jnp.exp(-gamma * dt)
-    sigma = jnp.sqrt(AKMA * KB * temperature[:, None]
-                     / masses[None, :])[..., None]           # (R, N, 1)
-    nvel = vel + kick                                        # B
-    npos = pos + 0.5 * dt * nvel                             # A
-    nvel = c1 * nvel + jnp.sqrt(1 - c1 * c1) * sigma * noise_i   # O
-    npos = npos + 0.5 * dt * nvel                            # A
-    if box > 0:
-        npos = jnp.mod(npos, box)
-    return jnp.where(lead, npos, pos), jnp.where(lead, nvel, vel)
+    c1, noise_scale = baoab_scales(masses, temperature, dt, gamma)
+    return baoab_fused_iteration(i, pos, vel, f, noise_i, c1, noise_scale,
+                                 masses, n_steps, max_steps, dt, box)
 
 
 def propagate_replica_major(state, force_fn: Callable, masses, temperature,
@@ -138,6 +166,48 @@ def propagate_replica_major_aux(state, force_aux_fn, aux, masses,
         pos, vel = _baoab_apply(i, pos, vel, f, noise[i], masses,
                                 temperature, n_steps, max_steps, dt,
                                 gamma, box)
+        return pos, vel, aux
+
+    pos, vel, aux = jax.lax.fori_loop(
+        0, max_steps + 1, body, (state["pos"], state["vel"], aux))
+    return {"pos": pos, "vel": vel}, aux
+
+
+def propagate_replica_major_fused(state, force_aux_fn, aux, masses,
+                                  temperature, n_steps, rngs,
+                                  max_steps: int, dt: float = 5e-4,
+                                  gamma: float = 5.0, box: float = 0.0):
+    """The fused-path jnp propagate loop: same iteration count, same
+    noise stream, same masked BAOAB update as
+    :func:`propagate_replica_major_aux`, restructured so one iteration
+    is one lean fused pass:
+
+      * the loop-invariant O-step scales are hoisted
+        (:func:`baoab_scales` — value-identical to the in-body form);
+      * the noise block is drawn INSIDE the body through the unrolled
+        threefry (``noise.step_noise_unrolled``) — bitwise the same
+        ``fold_in(key_r, t)`` stream, but ~1 fused op instead of the
+        pre-drawn stack's two rolled hash loops + per-iteration gather,
+        and O(R * N) live memory instead of O(S * R * N);
+      * force eval + update share one body via
+        :func:`baoab_fused_iteration`.
+
+    Every force evaluation stays INSIDE the loop body (``max_steps + 1``
+    iterations), so compiled rounding is scan-length-invariant and the
+    driver's bitwise-across-chunk-sizes guarantee carries over
+    unchanged.  Returns ({"pos", "vel"}, aux).
+    """
+    from repro.md import noise as NZ
+    c1, noise_scale = baoab_scales(masses, temperature, dt, gamma)
+    shape = state["pos"].shape[1:]
+
+    def body(i, carry):
+        pos, vel, aux = carry
+        f, aux = force_aux_fn(pos, aux)
+        noise_i = NZ.step_noise_unrolled(rngs, i, shape)
+        pos, vel = baoab_fused_iteration(i, pos, vel, f, noise_i, c1,
+                                         noise_scale, masses, n_steps,
+                                         max_steps, dt, box)
         return pos, vel, aux
 
     pos, vel, aux = jax.lax.fori_loop(

@@ -1,0 +1,132 @@
+"""Unrolled threefry noise draws for the fused propagate path.
+
+The propagate loops consume the per-(replica, step) stream
+``normal(fold_in(key_r, t), shape)`` (see ``integrators.stacked_step_noise``
+and the vmap oracle) — that stream is the cross-path contract: every
+force path folds the SAME keys, so trajectories agree to float tolerance
+and exchange decisions bit-for-bit.
+
+``jax.random`` lowers the threefry-2x32 hash through a ROLLED round loop
+on CPU (an XLA ``while`` whose body carries ~13 copies per round group;
+TPU/GPU get the unrolled form).  A static op census of the pallas-path
+propagate shows those two rolled loops (key fold + bit draw) plus their
+entry fusions account for ~40 of its ~128 executable ops — pure
+dispatch, no math the VPU cares about.  This module re-emits the SAME
+hash UNROLLED at the jnp level: 20 rounds of shift/xor/add fuse into
+one elementwise fusion, so the fused-path loop body draws its noise for
+~1 op instead of ~50, and the draw can live INSIDE the iteration body
+(per-iteration O(R*N) memory instead of the pre-drawn stack's O(S*R*N))
+without re-serializing the loop.
+
+Bitwise contract: ``step_noise_unrolled(rngs, t, shape)`` equals
+``stacked_step_noise(rngs, S, shape)[t]`` BIT FOR BIT for threefry keys
+— rolled and unrolled lowerings compute the identical hash, and the
+bits -> normal pipeline below mirrors ``jax.random``'s exactly
+(mantissa-randomize, bitcast, scale, erf_inv).  Pinned by hypothesis
+property tests in tests/test_conformance_matrix.py.  Non-threefry key
+impls (rbg/unsafe) fall back to the vmapped ``jax.random`` draw — same
+values, rolled lowering.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+
+
+def _rotate_left(x, d: int):
+    return lax.shift_left(x, np.uint32(d)) | lax.shift_right_logical(
+        x, np.uint32(32 - d))
+
+
+def threefry2x32_unrolled(k0, k1, x0, x1):
+    """The threefry-2x32 hash (Salmon et al. 2011), 20 rounds emitted
+    UNROLLED — bit-identical to ``jax.random``'s rolled CPU lowering
+    (same key schedule, same rotation groups, same final injections).
+    All four operands are uint32 arrays broadcast against each other.
+    """
+    ks2 = k0 ^ k1 ^ np.uint32(0x1BD11BDA)
+    x0 = x0 + k0
+    x1 = x1 + k1
+    schedule = ((k1, ks2), (ks2, k0), (k0, k1), (k1, ks2), (ks2, k0))
+    for group in range(5):
+        for r in _ROTATIONS[group % 2]:
+            x0 = x0 + x1
+            x1 = _rotate_left(x1, r)
+            x1 = x0 ^ x1
+        a, b = schedule[group]
+        x0 = x0 + a
+        x1 = x1 + b + np.uint32(group + 1)
+    return x0, x1
+
+
+def _bits_to_normal(bits):
+    """uint32 bits -> standard normals, mirroring jax.random's f32
+    pipeline exactly: randomize the 23 mantissa bits at exponent 0
+    (uniform in [1, 2)), shift to [nextafter(-1, 0), 1), then the
+    inverse-CDF map sqrt(2) * erfinv."""
+    lo = np.nextafter(np.float32(-1.0), np.float32(0.0), dtype=np.float32)
+    hi = np.float32(1.0)
+    fb = lax.shift_right_logical(bits, np.uint32(9)) | np.float32(1.0).view(
+        np.uint32)
+    floats = lax.bitcast_convert_type(fb, jnp.float32) - np.float32(1.0)
+    u = lax.max(lo, floats * (hi - lo) + lo)
+    return np.float32(np.sqrt(2)) * lax.erf_inv(u)
+
+
+def _counts(size: int):
+    """The padded threefry counter vector: jax pads an odd flat size
+    with one ZERO count (not a continued iota) before halving."""
+    odd = size % 2
+    counts = lax.iota(jnp.uint32, size)
+    if odd:
+        counts = jnp.concatenate([counts, jnp.zeros(1, jnp.uint32)])
+    return counts, (size + odd) // 2, odd
+
+
+def _is_threefry(rngs) -> bool:
+    """True when the unrolled hash reproduces this key array's stream.
+
+    Typed keys carry their impl in the dtype; raw (R, 2) uint32 key
+    arrays are threefry by construction (jax's default impl).
+    """
+    if jnp.issubdtype(rngs.dtype, jax.dtypes.prng_key):
+        return "fry" in str(rngs.dtype)
+    return rngs.dtype == jnp.uint32 and rngs.ndim == 2 and rngs.shape[-1] == 2
+
+
+def _key_data(rngs):
+    if jnp.issubdtype(rngs.dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(rngs)
+    return rngs
+
+
+def step_noise_unrolled(rngs, t, shape):
+    """One iteration's noise block, (R, *shape) — bitwise equal to
+    ``stacked_step_noise(rngs, S, shape)[t]`` but a single elementwise
+    fusion: fold_in(key_r, t) and the bit draw both go through the
+    unrolled hash, so a propagate loop body can draw in place instead of
+    indexing a pre-drawn stack.  ``t`` may be traced (the loop index).
+    """
+    if not _is_threefry(rngs):
+        return jax.vmap(lambda k: jax.random.normal(
+            jax.random.fold_in(k, t), shape))(rngs)
+    kd = _key_data(rngs)
+    n_rep = kd.shape[0]
+    # fold_in(key, t) == threefry(key, seed(t)) with seed(t) = [0, t]
+    f0, f1 = threefry2x32_unrolled(
+        kd[:, 0], kd[:, 1], jnp.zeros((n_rep,), jnp.uint32),
+        jnp.broadcast_to(jnp.uint32(t), (n_rep,)))
+    size = math.prod(shape)
+    counts, half, _ = _counts(size)
+    b0, b1 = threefry2x32_unrolled(
+        f0[:, None], f1[:, None],
+        jnp.broadcast_to(counts[:half], (n_rep, half)),
+        jnp.broadcast_to(counts[half:], (n_rep, half)))
+    bits = jnp.concatenate([b0, b1], axis=1)[:, :size]
+    return _bits_to_normal(bits).reshape((n_rep,) + tuple(shape))
